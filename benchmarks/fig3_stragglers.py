@@ -1,0 +1,38 @@
+"""Paper Fig. 3: model payload vs stragglers — the fraction of clients for
+which the resource problem (5) is infeasible, per model, over rounds."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import MODEL_PARAMS
+from repro.core.resource import NetworkConfig, make_clients, optimize_round
+
+
+def run(num_clients=40, rounds=10, seed=0):
+    t0 = time.time()
+    rng = np.random.default_rng(seed)
+    net = NetworkConfig()
+    clients = make_clients(rng, num_clients)
+    rows = []
+    for model, n_params in sorted(MODEL_PARAMS.items(),
+                                  key=lambda kv: -kv[1]):
+        fracs = []
+        per_client = np.zeros(num_clients)
+        for t in range(rounds):
+            dec = optimize_round(rng, net, clients, n_params)
+            infeas = np.array([not d.feasible for d in dec])
+            fracs.append(infeas.mean())
+            per_client += infeas
+        # paper metric: clients that are stragglers in >= 50% of rounds
+        ge50 = float(np.mean(per_client / rounds >= 0.5))
+        rows.append((f"fig3_{model}_straggler_frac", float(np.mean(fracs))))
+        rows.append((f"fig3_{model}_ge50pct_rounds", ge50))
+    return rows, time.time() - t0
+
+
+if __name__ == "__main__":
+    rows, dt = run()
+    for k, v in rows:
+        print(f"{k},{dt * 1e6:.0f},{v:.4f}")

@@ -1,0 +1,57 @@
+"""Roofline report: aggregates the dry-run artifacts (experiments/dryrun/*.json)
+into the per-(arch x shape x mesh) table of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+DEFAULT_DIR = Path("experiments/dryrun")
+
+
+def load_records(dirpath=DEFAULT_DIR):
+    recs = []
+    for f in sorted(Path(dirpath).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def table(recs) -> str:
+    hdr = ("| arch | shape | mesh | engine | compute_s | memory_s | "
+           "collective_s | dominant | useful_flops | peak GB/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in recs:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | "
+                         f"SKIP | - | - |")
+            continue
+        rl = r["roofline"]
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        peak_gb = r["per_device"]["memory"]["peak_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['engine']} | "
+            f"{rl['compute_s']:.4f} | {rl['memory_s']:.4f} | "
+            f"{rl['collective_s']:.4f} | {rl['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.3f} | {peak_gb:.1f} |")
+    return "\n".join(lines)
+
+
+def run(dirpath=DEFAULT_DIR):
+    t0 = time.time()
+    recs = load_records(dirpath)
+    rows = []
+    for r in recs:
+        if "skipped" in r:
+            continue
+        key = f"roofline_{r['arch']}_{r['shape']}"
+        if r.get("multi_pod"):
+            key += "_multipod"
+        rows.append((key + "_bound_s",
+                     r["roofline"]["step_time_lower_bound_s"]))
+    return rows, time.time() - t0
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(table(recs))

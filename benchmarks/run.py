@@ -1,0 +1,46 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Reduced scales for CPU are
+documented in EXPERIMENTS.md (the mechanisms are the paper's, the scale is
+not). The roofline rows require dry-run artifacts in experiments/dryrun/.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (ablation_scores, fig1_static_vs_timevarying,
+                        fig2_label_drift, fig3_stragglers, roofline,
+                        table2_dataset1, table4_dataset2, theorem1_tracking)
+
+
+def main() -> None:
+    suites = [
+        ("fig2_label_drift", lambda: fig2_label_drift.run()),
+        ("fig3_stragglers", lambda: fig3_stragglers.run()),
+        ("fig1_static_vs_timevarying", lambda: fig1_static_vs_timevarying.run()),
+        ("table2_dataset1", lambda: table2_dataset1.run()[:2]),
+        ("table4_dataset2", lambda: table4_dataset2.run()),
+        ("ablation_scores", lambda: ablation_scores.run()),
+        ("theorem1_tracking", lambda: theorem1_tracking.run()),
+        ("roofline", lambda: roofline.run()),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            rows, dt = fn()
+            us = dt * 1e6 / max(len(rows), 1)
+            for k, v in rows:
+                print(f"{k},{us:.0f},{v:.6f}")
+            sys.stdout.flush()
+        except Exception:
+            failures += 1
+            print(f"{name},0,FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

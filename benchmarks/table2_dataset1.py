@@ -1,0 +1,39 @@
+"""Paper Tables II-III / Figs. 4-5: test accuracy/loss of OSAFL vs the five
+modified baselines (+ centralized Genie) on video-caching Dataset-1.
+Reduced scale: FCN + CNN models, fewer clients/rounds (EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (ALL_ALGS, ExperimentConfig,
+                               run_centralized_sgd, run_experiment)
+
+
+def run(models=("fcn",), topks=(1, 2), rounds=25, num_clients=12, seed=0):
+    t0 = time.time()
+    rows = []
+    summary = {}
+    for model in models:
+        for k in topks:
+            xc = ExperimentConfig(model=model, dataset=1, rounds=rounds,
+                                  num_clients=num_clients, topk=k, seed=seed)
+            cen = run_centralized_sgd(xc)
+            best = max(h["test_acc"] for h in cen)
+            rows.append((f"table2_{model}_K{k}_central_acc", best))
+            for alg in ALL_ALGS:
+                hist = run_experiment(alg, xc)
+                accs = [h["test_acc"] for h in hist]
+                losses = [h["test_loss"] for h in hist]
+                i = int(np.argmax(accs))
+                rows.append((f"table2_{model}_K{k}_{alg}_acc", accs[i]))
+                rows.append((f"table2_{model}_K{k}_{alg}_loss", losses[i]))
+                summary[(model, k, alg)] = (accs[i], losses[i])
+    return rows, time.time() - t0, summary
+
+
+if __name__ == "__main__":
+    rows, dt, _ = run()
+    for k, v in rows:
+        print(f"{k},{dt * 1e6:.0f},{v:.4f}")

@@ -1,0 +1,26 @@
+"""Serve a small model with batched requests: prefill + KV-cache decode.
+
+Demonstrates the serving path used by the decode_32k / long_500k dry-run
+shapes, on a reduced zamba2 (hybrid Mamba2 + shared-attention) whose decode
+state is O(1) in context length.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
+"""
+import argparse
+
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-2.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--decode-steps", type=int, default=24)
+    args = ap.parse_args()
+    run(args.arch, reduced=True, batch=args.batch,
+        prompt_len=args.prompt_len, decode_steps=args.decode_steps)
+
+
+if __name__ == "__main__":
+    main()

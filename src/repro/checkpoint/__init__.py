@@ -1,0 +1,42 @@
+"""npz checkpointing with path-flattened keys (host-gathered; adequate for the
+CPU engine; a real deployment would swap in per-shard array serialization)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _flatten(params) -> dict:
+    return {_key(path): np.asarray(leaf)
+            for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]}
+
+
+def save(path, params, step: int = 0, metadata: dict = None):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **_flatten(params))
+    Path(str(path) + ".meta.json").write_text(
+        json.dumps({"step": step, **(metadata or {})}))
+
+
+def restore(path, like):
+    """Restore into the structure of ``like`` (a params pytree)."""
+    p = str(path)
+    data = np.load(p if p.endswith(".npz") else p + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    assert set(data.files) == {_key(pp) for pp, _ in flat}, \
+        "checkpoint structure mismatch"
+    new_leaves = [data[_key(pp)].astype(leaf.dtype) for pp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_metadata(path) -> dict:
+    return json.loads(Path(str(path) + ".meta.json").read_text())

@@ -1,0 +1,56 @@
+"""Architecture registry. ``get_config(name)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (FLConfig, InputShape, INPUT_SHAPES,
+                                INPUT_SHAPE_BY_NAME, MLAConfig, ModelConfig,
+                                MoEConfig, SSMConfig)
+
+ARCH_IDS = (
+    "deepseek-v3-671b",
+    "arctic-480b",
+    "h2o-danube-3-4b",
+    "nemotron-4-15b",
+    "zamba2-2.7b",
+    "whisper-medium",
+    "qwen1.5-4b",
+    "llama-3.2-vision-11b",
+    "xlstm-350m",
+    "deepseek-coder-33b",
+    # the paper's own models
+    "paper-fcn", "paper-cnn", "paper-squeezenet", "paper-lstm",
+)
+
+_MODULES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "arctic-480b": "arctic_480b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "whisper-medium": "whisper_medium",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "xlstm-350m": "xlstm_350m",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "paper-fcn": "paper_models",
+    "paper-cnn": "paper_models",
+    "paper-squeezenet": "paper_models",
+    "paper-lstm": "paper_models",
+}
+
+TRANSFORMER_ARCHS = tuple(a for a in ARCH_IDS if not a.startswith("paper-"))
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    if name.startswith("paper-"):
+        return mod.CONFIGS[name]
+    return mod.CONFIG
+
+
+__all__ = ["ARCH_IDS", "TRANSFORMER_ARCHS", "get_config", "ModelConfig",
+           "MoEConfig", "MLAConfig", "SSMConfig", "FLConfig", "InputShape",
+           "INPUT_SHAPES", "INPUT_SHAPE_BY_NAME"]

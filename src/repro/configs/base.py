@@ -1,0 +1,209 @@
+"""Config dataclasses for all supported architectures.
+
+Every assigned architecture is expressed as a ``ModelConfig``; reduced smoke
+variants are produced by ``ModelConfig.reduced()``. Configs are plain frozen
+dataclasses so they can be hashed into jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 2048
+    num_shared_experts: int = 0       # deepseek-v3: 1 shared expert
+    dense_residual_d_ff: int = 0      # arctic: dense MLP in parallel with MoE
+    first_dense_layers: int = 0       # deepseek-v3: first 3 layers are dense
+    d_ff_dense: int = 0               # d_ff of those dense layers
+    router_aux_coef: float = 0.001    # load-balance loss coefficient
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2/V3)."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba2"              # "mamba2" | "xlstm"
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    n_groups: int = 1
+    chunk_size: int = 256
+    # xlstm-specific
+    slstm_every: int = 0              # 0 => none; k => every k-th block is sLSTM
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 1.3334
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """zamba2-style hybrid: SSM backbone + shared attention block."""
+    shared_attn_every: int = 6        # insert shared attention block every k SSM layers
+    shared_block_d_ff: int = 10240
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder for enc-dec models (whisper). Frontend (conv/mel) is a stub:
+    input_specs provides precomputed frame embeddings of shape (B, n_frames, d)."""
+    n_layers: int = 24
+    n_frames: int = 1500
+    max_decoder_len: int = 448
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    """Cross-attention image layers for VLMs. The ViT is a stub: input_specs
+    provides precomputed patch embeddings of shape (B, n_patches, d_vision)."""
+    cross_attn_every: int = 5         # every 5th layer is a cross-attn layer
+    n_patches: int = 1601
+    d_vision: int = 1280
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                    # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 => d_model // n_heads
+    attention: str = "gqa"            # gqa | mla | none
+    qkv_bias: bool = False
+    sliding_window: int = 0           # 0 => full attention
+    mlp: str = "swiglu"               # swiglu | relu2 | gelu
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    mtp_depth: int = 0                # deepseek-v3 multi-token prediction heads
+    remat: bool = False               # checkpoint each layer (train memory)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    vision: Optional[VisionConfig] = None
+    source: str = ""                  # citation
+    # numeric precision
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode memory is bounded in context length (long_500k legal)."""
+        if self.arch_type in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0 and self.encoder is None
+
+    @property
+    def has_decode(self) -> bool:
+        """Encoder-only archs have no decode step (none assigned here)."""
+        return True
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: 2 layers, d_model<=512, <=4 experts, small vocab."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        # keep GQA ratio where possible
+        if self.n_kv_heads < self.n_heads:
+            n_kv = max(1, n_heads // 2)
+        kw: dict = dict(
+            n_layers=2,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=64 if self.head_dim else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            mtp_depth=min(self.mtp_depth, 1),
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=min(self.moe.d_ff_expert, 256),
+                d_ff_dense=min(self.moe.d_ff_dense, 256) if self.moe.d_ff_dense else 0,
+                dense_residual_d_ff=min(self.moe.dense_residual_d_ff, 256)
+                if self.moe.dense_residual_d_ff else 0,
+                first_dense_layers=min(self.moe.first_dense_layers, 1),
+            )
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                                  qk_nope_head_dim=32, qk_rope_head_dim=16,
+                                  v_head_dim=32)
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, d_state=min(self.ssm.d_state, 16), chunk_size=32)
+        if self.hybrid is not None:
+            kw["hybrid"] = dataclasses.replace(
+                self.hybrid, shared_attn_every=1,
+                shared_block_d_ff=min(self.hybrid.shared_block_d_ff, 256))
+        if self.encoder is not None:
+            kw["encoder"] = dataclasses.replace(
+                self.encoder, n_layers=2, n_frames=16, max_decoder_len=64)
+        if self.vision is not None:
+            kw["vision"] = dataclasses.replace(
+                self.vision, cross_attn_every=2, n_patches=16, d_vision=64)
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", 4_096, 256, "train"),
+    InputShape("prefill_32k", 32_768, 32, "prefill"),
+    InputShape("decode_32k", 32_768, 128, "decode"),
+    InputShape("long_500k", 524_288, 1, "decode"),
+)
+
+INPUT_SHAPE_BY_NAME = {s.name: s for s in INPUT_SHAPES}
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    """Federated-learning round configuration (paper Section II/III)."""
+    num_clients: int = 16
+    kappa_max: int = 5                # κ: max local SGD steps
+    local_lr: float = 0.1             # η
+    global_lr: float = 1.0            # η̃
+    chi: float = 1.0                  # χ score shift control (eq. 21)
+    algorithm: str = "osafl"          # osafl|fedavg|fedprox|fednova|afa_cd|feddisco
+    fedprox_mu: float = 0.9
+    fednova_slowdown: float = 0.1
+    feddisco_a: float = 0.2
+    feddisco_b: float = 0.1
+    score_sketch_dim: int = 0         # 0 = exact scores (paper); >0 = sketched (§Perf)
+    stale_scores: bool = False        # use round t-1 scores (§Perf A5 engine)
+    literal_init_buffer: bool = False # Algorithm 2's literal d[u]=w^t/eta for
+                                      # never-participated clients (equivalent
+                                      # to treating their model as 0; unstable
+                                      # under stragglers — see EXPERIMENTS.md)

@@ -1,0 +1,7 @@
+from repro.core.osafl import ClientUpdate, OSAFLServer
+from repro.core.baselines import make_server
+from repro.core.client import local_train
+from repro.core.buffer import OnlineBuffer, binomial_arrivals
+
+__all__ = ["ClientUpdate", "OSAFLServer", "make_server", "local_train",
+           "OnlineBuffer", "binomial_arrivals"]

@@ -1,0 +1,143 @@
+"""Modified FL baselines (paper Algorithms 6-10).
+
+All baselines share the paper's resource-optimization front end (clients solve
+(5) for kappa) and the stale-contribution buffers; only the aggregation rule
+differs:
+
+  M-FedAvg   (Alg. 6):  w^{t+1} = (1/U) sum_u w[u]
+  M-FedProx  (Alg. 7):  FedAvg aggregation; proximal term mu/2 ||w - w^t||^2
+                         in the *local* objective (client-side, see client.py)
+  M-FedNova  (Alg. 8):  w^{t+1} = w^t - eta * tau~ * (sum_u p_u k_u) *
+                                   sum_u (p_u k_u / sum p k) d[u]
+                         (requires D_u and kappa_u at the CS — violates the
+                         paper's privacy assumption; kept for comparison)
+  M-AFA-CD   (Alg. 9):  w^{t+1} = w^t - eta_g * (1/U) sum_u d[u]
+  M-FedDisco (Alg. 10): w^{t+1} = sum_u alpha_u w[u],
+                         alpha_u = ReLU(p_u - a*disco_u + b) / sum(...)
+                         (requires the client label histogram — also violates
+                         the privacy assumption)
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.osafl import ClientUpdate
+from repro.core.scores import (tree_add, tree_scale, tree_sub,
+                               tree_zeros_like)
+
+
+class _BufferedServer:
+    """Common machinery: per-client contribution buffers + staleness rules."""
+
+    buffers_hold_weights = True      # False => buffers hold normalized grads d
+
+    def __init__(self, params, fl: FLConfig, num_clients: int, seed: int = 0):
+        self.params = params
+        self.fl = fl
+        self.U = num_clients
+        self.participated = np.zeros(num_clients, bool)
+        if self.buffers_hold_weights:
+            self.buffer: List = [params for _ in range(num_clients)]
+        else:
+            init_d = (tree_scale(params, 1.0 / fl.local_lr)
+                      if fl.literal_init_buffer else tree_zeros_like(params))
+            self.buffer = [init_d for _ in range(num_clients)]
+        self.meta: List[Optional[ClientUpdate]] = [None] * num_clients
+
+    def _ingest(self, updates: Sequence[ClientUpdate], weights: bool):
+        for up in updates:
+            self.buffer[up.uid] = up.d
+            self.participated[up.uid] = True
+            self.meta[up.uid] = up
+        for u in range(self.U):
+            if not self.participated[u]:
+                if weights:
+                    self.buffer[u] = self.params           # averaging no-op
+                elif self.fl.literal_init_buffer:
+                    self.buffer[u] = tree_scale(self.params,
+                                                1.0 / self.fl.local_lr)
+                else:
+                    self.buffer[u] = tree_zeros_like(self.params)
+
+    def _mean(self, items, ws):
+        out = tree_zeros_like(self.params)
+        for it, w in zip(items, ws):
+            out = tree_add(out, tree_scale(it, float(w)))
+        return out
+
+
+class FedAvgServer(_BufferedServer):
+    def round(self, updates: Sequence[ClientUpdate]):
+        self._ingest(updates, weights=True)
+        self.params = self._mean(self.buffer, np.full(self.U, 1.0 / self.U))
+        return self.params
+
+
+class FedProxServer(FedAvgServer):
+    """Aggregation identical to FedAvg; clients add the proximal term."""
+    local_prox = True
+
+
+class FedNovaServer(_BufferedServer):
+    buffers_hold_weights = False
+
+    def round(self, updates: Sequence[ClientUpdate]):
+        self._ingest(updates, weights=False)
+        sizes = np.array([self.meta[u].data_size if self.meta[u] else 1
+                          for u in range(self.U)], float)
+        p = sizes / sizes.sum()
+        kap = np.array([self.meta[u].kappa if self.meta[u] else 1
+                        for u in range(self.U)], float)
+        pk = p * kap
+        tau_eff = self.fl.fednova_slowdown * pk.sum()
+        w = self.fl.local_lr * tau_eff * pk / pk.sum()
+        self.params = tree_sub(self.params, self._mean(self.buffer, w))
+        return self.params
+
+
+class AFACDServer(_BufferedServer):
+    buffers_hold_weights = False
+
+    def round(self, updates: Sequence[ClientUpdate]):
+        self._ingest(updates, weights=False)
+        w = np.full(self.U, self.fl.global_lr * self.fl.local_lr / self.U)
+        self.params = tree_sub(self.params, self._mean(self.buffer, w))
+        return self.params
+
+
+class FedDiscoServer(_BufferedServer):
+    def round(self, updates: Sequence[ClientUpdate]):
+        self._ingest(updates, weights=True)
+        sizes = np.array([self.meta[u].data_size if self.meta[u] else 1
+                          for u in range(self.U)], float)
+        p = sizes / sizes.sum()
+        disco = np.zeros(self.U)
+        for u in range(self.U):
+            h = self.meta[u].label_hist if self.meta[u] is not None else None
+            if h is not None:
+                uniform = np.full_like(h, 1.0 / len(h))
+                disco[u] = float(np.linalg.norm(h - uniform))
+        a, b = self.fl.feddisco_a, self.fl.feddisco_b
+        alpha = np.maximum(p - a * disco + b, 0.0)
+        alpha = alpha / max(alpha.sum(), 1e-12)
+        self.params = self._mean(self.buffer, alpha)
+        return self.params
+
+
+SERVERS = {
+    "fedavg": FedAvgServer,
+    "fedprox": FedProxServer,
+    "fednova": FedNovaServer,
+    "afa_cd": AFACDServer,
+    "feddisco": FedDiscoServer,
+}
+
+
+def make_server(params, fl: FLConfig, num_clients: int, seed: int = 0):
+    from repro.core.osafl import OSAFLServer
+    if fl.algorithm == "osafl":
+        return OSAFLServer(params, fl, num_clients, seed=seed)
+    return SERVERS[fl.algorithm](params, fl, num_clients, seed=seed)

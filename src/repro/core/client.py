@@ -1,0 +1,43 @@
+"""Client-side local training (paper eqs. 14-16).
+
+A client synchronizes to the global model, performs kappa_u^t mini-batch SGD
+steps on its current FIFO dataset, and returns the *normalized accumulated
+gradient* d_u^t = (w^{t,0} - w^{t,kappa}) / (eta * kappa). Supports the
+FedProx proximal local objective (Algorithm 7).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.buffer import OnlineBuffer
+from repro.core.scores import tree_scale, tree_sub
+
+
+@partial(jax.jit, static_argnames=("grad_fn", "prox_mu"))
+def _sgd_step(params, batch, lr, grad_fn, prox_mu=0.0, global_params=None):
+    g = grad_fn(params, batch)
+    if prox_mu:
+        g = jax.tree.map(lambda gg, w, w0: gg + prox_mu * (w - w0),
+                         g, params, global_params)
+    return jax.tree.map(lambda w, gg: w - lr * gg, params, g)
+
+
+def local_train(global_params, grad_fn: Callable, buffer: OnlineBuffer,
+                kappa: int, lr: float, batch_size: int,
+                rng: np.random.Generator, prox_mu: float = 0.0
+                ) -> Tuple[dict, dict]:
+    """Run kappa local SGD steps. Returns (d_u, w_final)."""
+    params = global_params
+    for _ in range(kappa):
+        bx, by = buffer.sample_batch(rng, batch_size)
+        batch = {"x": jnp.asarray(bx), "y": jnp.asarray(by)}
+        params = _sgd_step(params, batch, lr, grad_fn,
+                           prox_mu=prox_mu,
+                           global_params=global_params if prox_mu else None)
+    d = tree_scale(tree_sub(global_params, params), 1.0 / (lr * kappa))
+    return d, params

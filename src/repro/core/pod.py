@@ -1,0 +1,281 @@
+"""Pod-scale OSAFL engines (the paper's aggregation mapped onto TPU meshes).
+
+Clients ⇄ data-parallel rows of the mesh. Three engines (DESIGN.md §3):
+
+exact_tp        shard_map manual over the client axes ('pod','data'), auto-TP
+                over 'model'. Per-client gradients are the natural pre-all-
+                reduce local gradients; OSAFL's server-side scoring becomes a
+                two-phase scored all-reduce:
+                  (1) psum(g)   -> mean update d^t          [grad-sized]
+                  (2) local dot/norm scalars -> lambda_u -> Delta_u
+                  (3) psum(Delta_u * g) -> scored update    [grad-sized]
+                Exact paper semantics (kappa=1 normalized update), 1 backward.
+
+exact_recompute auto-SPMD (any sharding incl. FSDP, for the >100B MoE archs
+                whose replicas cannot fit TP-only). Clients are microbatch
+                groups scanned twice: pass 1 accumulates sum d_u, pass 2
+                recomputes each d_u, scores it against d^t on the fly and
+                accumulates Delta_u d_u. Exact semantics, 2 backwards.
+
+sketch          beyond-paper §Perf variant of exact_tp: replace the mean-
+                update psum with a k-dim count-sketch psum; lambda_u is
+                estimated from sketches (unbiased JL inner products). One
+                grad-sized all-reduce instead of two.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.scores import (sketch_tree, tree_add, tree_dot, tree_norm,
+                               tree_scale, tree_sub, tree_zeros_like)
+from repro.models.transformer import decode_step, forward, loss_fn
+
+
+def client_axes(mesh) -> tuple:
+    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+
+
+def num_pod_clients(mesh) -> int:
+    n = 1
+    for a in client_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _lambda(chi, cos):
+    return (chi + cos) / (chi + 1.0)
+
+
+def _scored_metrics(lam, loss, axes, U):
+    return {
+        "loss": jax.lax.psum(loss, axes) / U,
+        "lambda_mean": jax.lax.psum(lam, axes) / U,
+        "lambda_min": -jax.lax.pmax(-lam, axes),
+        "lambda_max": jax.lax.pmax(lam, axes),
+    }
+
+
+# ---------------------------------------------------------------------------
+# exact_tp / sketch engines (shard_map manual over clients, auto over model)
+# ---------------------------------------------------------------------------
+
+def make_tp_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
+                       *, sketch_dim: int = 0) -> Callable:
+    axes = client_axes(mesh)
+    U = num_pod_clients(mesh)
+    lr_eff = fl.global_lr * fl.local_lr
+    chi = fl.chi
+    sketch_key = jax.random.PRNGKey(17)
+
+    def local_update(params, batch):
+        """Client-local normalized update d_u (kappa-step grad accumulation:
+        d_u = (1/kappa) sum_tau g(w, b_tau) — first-order-exact local SGD)."""
+        def one(batch_tau):
+            (l, m), g = jax.value_and_grad(
+                lambda p: loss_fn(p, batch_tau, cfg), has_aux=True)(params)
+            return l, g
+        if fl.kappa_max <= 1:
+            return one(batch)
+        # microbatch split along batch dim
+        split = jax.tree.map(
+            lambda x: x.reshape((fl.kappa_max, -1) + x.shape[1:]), batch)
+        def body(acc, b_tau):
+            l, g = one(b_tau)
+            return (acc[0] + l / fl.kappa_max,
+                    tree_add(acc[1], tree_scale(g, 1.0 / fl.kappa_max))), None
+        (l, g), _ = jax.lax.scan(body, (jnp.float32(0.0),
+                                        tree_zeros_like(params)), split)
+        return l, g
+
+    def step_body(params, batch):
+        loss, g = local_update(params, batch)
+        if sketch_dim:
+            sk = sketch_tree(g, sketch_key, sketch_dim)
+            sk_mean = jax.lax.psum(sk, axes) / U
+            cos = jnp.vdot(sk, sk_mean) / jnp.maximum(
+                jnp.linalg.norm(sk) * jnp.linalg.norm(sk_mean), 1e-12)
+        else:
+            d_mean = jax.tree.map(lambda x: jax.lax.psum(x, axes) / U, g)
+            cos = tree_dot(g, d_mean) / jnp.maximum(
+                tree_norm(g) * tree_norm(d_mean), 1e-12)
+        lam = _lambda(chi, cos)
+        update = jax.tree.map(lambda x: jax.lax.psum(lam * x, axes) / U, g)
+        new_params = jax.tree.map(lambda w, u: w - lr_eff * u.astype(w.dtype),
+                                  params, update)
+        return new_params, _scored_metrics(lam, loss, axes, U)
+
+    batch_spec = P(axes)  # shard batch dim over client axes
+
+    def step(params, batch):
+        in_specs = (jax.tree.map(lambda _: P(), params),
+                    jax.tree.map(lambda _: batch_spec, batch))
+        out_specs = (jax.tree.map(lambda _: P(), params),
+                     {k: P() for k in ("loss", "lambda_mean", "lambda_min",
+                                       "lambda_max")})
+        return shard_map(step_body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, axis_names=set(axes),
+                         check_vma=False)(params, batch)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# exact_recompute engine (auto-SPMD; FSDP-compatible; 2 backwards)
+# ---------------------------------------------------------------------------
+
+def make_recompute_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
+                              num_clients: int, grad_specs=None) -> Callable:
+    lr_eff = fl.global_lr * fl.local_lr
+    chi = fl.chi
+    U = num_clients
+
+    def pin(tree):
+        """Pin the grad accumulator to the parameter sharding: without this
+        the SPMD partitioner replicates the scan carry and all-gathers full
+        stacked expert-gradient tensors every client iteration (§Perf A2:
+        13.9TB/step of all-gather on deepseek-v3)."""
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree,
+            grad_specs)
+
+    import os
+    acc_dtype = (jnp.bfloat16 if os.environ.get("REPRO_ACCUM_BF16") == "1"
+                 else jnp.float32)
+
+    def grad_u(params, batch_u):
+        (l, m), g = jax.value_and_grad(
+            lambda p: loss_fn(p, batch_u, cfg), has_aux=True)(params)
+        # accumulate in f32 by default: bf16 params yield mixed cotangents.
+        # REPRO_ACCUM_BF16=1 accumulates in bf16 (§Perf A3 experiment).
+        return l, pin(jax.tree.map(lambda x: x.astype(acc_dtype), g))
+
+    def f32_zeros(params):
+        return pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params))
+
+    def step(params, batch):
+        # batch leaves: (U, b, ...) — clients scanned sequentially
+        def pass1(acc, batch_u):
+            l, g = grad_u(params, batch_u)
+            return pin(tree_add(acc, g)), l
+        sum_d, losses = jax.lax.scan(pass1, f32_zeros(params), batch)
+        d_mean = tree_scale(sum_d, 1.0 / U)
+        nm = tree_norm(d_mean)
+
+        def pass2(acc, batch_u):
+            _, g = grad_u(params, batch_u)
+            cos = tree_dot(g, d_mean) / jnp.maximum(tree_norm(g) * nm, 1e-12)
+            lam = _lambda(chi, cos)
+            scaled = jax.tree.map(lambda x: (lam * x).astype(acc_dtype), g)
+            return pin(tree_add(acc, scaled)), lam
+        wsum, lams = jax.lax.scan(pass2, f32_zeros(params), batch)
+        update = tree_scale(wsum, 1.0 / U)
+        new_params = jax.tree.map(lambda w, u: w - lr_eff * u.astype(w.dtype),
+                                  params, update)
+        metrics = {"loss": jnp.mean(losses), "lambda_mean": jnp.mean(lams),
+                   "lambda_min": jnp.min(lams), "lambda_max": jnp.max(lams)}
+        return new_params, metrics
+    return step
+
+
+# ---------------------------------------------------------------------------
+# stale-score engine (beyond-paper §Perf A5): ONE backward pass.
+# Delta_u^t is computed from round t-1's gradient sketches; this round's
+# sketches are accumulated during the same pass for round t+1. Exact OSAFL
+# needs d^t before it can weight d_u^t (hence recompute's 2 passes); scores
+# drift slowly round-to-round, so a one-round-stale lambda trades a small
+# weighting lag for halving compute/memory/collectives. Task-accuracy impact
+# is validated on the paper's CPU experiments (benchmarks/ablation).
+# ---------------------------------------------------------------------------
+
+def make_stale_score_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
+                                num_clients: int, grad_specs=None,
+                                sketch_dim: int = 1024) -> Callable:
+    lr_eff = fl.global_lr * fl.local_lr
+    chi = fl.chi
+    U = num_clients
+    sketch_key = jax.random.PRNGKey(17)
+
+    def pin(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree,
+            grad_specs)
+
+    def step(params, lam_prev, batch):
+        """lam_prev: (U,) scores from the previous round (init: ones)."""
+        def body(acc, inp):
+            batch_u, lam_u = inp
+            (l, m), g = jax.value_and_grad(
+                lambda p: loss_fn(p, batch_u, cfg), has_aux=True)(params)
+            g = pin(jax.tree.map(lambda x: x.astype(jnp.float32), g))
+            sk = sketch_tree(g, sketch_key, sketch_dim)
+            acc = pin(jax.tree.map(lambda a, x: a + lam_u * x, acc, g))
+            return acc, (l, sk)
+
+        zeros = pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        wsum, (losses, sketches) = jax.lax.scan(body, zeros,
+                                                (batch, lam_prev))
+        update = tree_scale(wsum, 1.0 / U)
+        new_params = jax.tree.map(lambda w, u: w - lr_eff * u.astype(w.dtype),
+                                  params, update)
+        # next round's scores from this round's sketches (eq. 20 on sketches)
+        mean_sk = jnp.mean(sketches, axis=0)
+        cos = (sketches @ mean_sk) / jnp.maximum(
+            jnp.linalg.norm(sketches, axis=1) * jnp.linalg.norm(mean_sk),
+            1e-12)
+        lam_next = _lambda(chi, cos)
+        metrics = {"loss": jnp.mean(losses),
+                   "lambda_mean": jnp.mean(lam_next),
+                   "lambda_min": jnp.min(lam_next),
+                   "lambda_max": jnp.max(lam_next)}
+        return new_params, lam_next, metrics
+    return step
+
+
+# ---------------------------------------------------------------------------
+# plain data-parallel train step (the M-FedAvg pod baseline: 1 all-reduce)
+# ---------------------------------------------------------------------------
+
+def make_fedavg_train_step(cfg: ModelConfig, fl: FLConfig, mesh) -> Callable:
+    """Ordinary DP+TP step — the unscored baseline the roofline compares to."""
+    lr_eff = fl.global_lr * fl.local_lr
+
+    def step(params, batch):
+        (loss, m), g = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        new_params = jax.tree.map(lambda w, u: w - lr_eff * u.astype(w.dtype),
+                                  params, g)
+        return new_params, {"loss": loss}
+    return step
+
+
+# ---------------------------------------------------------------------------
+# serving steps (decode shapes)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, tokens, pos, memory=None):
+        logits, new_cache = decode_step(params, cache, tokens, pos, cfg,
+                                        memory=memory)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill(params, batch):
+        logits, _ = forward(params, batch, cfg)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    return prefill

@@ -1,0 +1,81 @@
+"""Online score computation (paper eqs. 19-21, 34-35).
+
+Exact scores: lambda_u = (chi + cos(d_mean, d_u)) / (chi + 1), Delta_u = lambda_u.
+Sketched scores (beyond-paper, §Perf): cosine on a k-dim Rademacher projection
+of each update — an unbiased inner-product estimator (Johnson-Lindenstrauss),
+reducing the score's communication/memory from O(N) to O(k).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_dot(a, b) -> jnp.ndarray:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+               for x, y in zip(la, lb))
+
+
+def tree_norm(a) -> jnp.ndarray:
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def cosine(a, b, eps: float = 1e-12) -> jnp.ndarray:
+    return tree_dot(a, b) / jnp.maximum(tree_norm(a) * tree_norm(b), eps)
+
+
+def lambda_scores(updates: Sequence, chi: float = 1.0) -> np.ndarray:
+    """Paper eqs. 19-21: d_mean = (1/U) sum_u d_u; lambda in [0, 1]."""
+    U = len(updates)
+    d_mean = tree_scale(updates[0], 1.0 / U)
+    for d in updates[1:]:
+        d_mean = tree_add(d_mean, tree_scale(d, 1.0 / U))
+    lam = np.array([float((chi + cosine(d_mean, d)) / (chi + 1.0))
+                    for d in updates])
+    return lam
+
+
+def sketch_tree(tree, key, k: int) -> jnp.ndarray:
+    """k-dim count-sketch of a pytree: bucket j%k after a random sign flip,
+    s_b = sum_{j: b(j)=b} sign_j * x_j. Unbiased inner-product estimator with
+    O(N) work and O(N) transient memory (signs are leaf-sized, not k*N).
+    The key fixes the signs so sketches are comparable across clients/rounds."""
+    out = jnp.zeros((k,), jnp.float32)
+    for i, leaf in enumerate(jax.tree.leaves(tree)):
+        lk = jax.random.fold_in(key, i)
+        flat = leaf.reshape(-1).astype(jnp.float32)
+        pad = (-flat.size) % k
+        flat = jnp.pad(flat, (0, pad))
+        signs = jax.random.rademacher(lk, flat.shape, jnp.float32)
+        out = out + jnp.sum((flat * signs).reshape(-1, k), axis=0)
+    return out
+
+
+def lambda_scores_sketched(sketches: jnp.ndarray, chi: float = 1.0
+                           ) -> np.ndarray:
+    """sketches: (U, k). Same formula on the projected updates."""
+    mean = jnp.mean(sketches, axis=0)
+    dots = sketches @ mean
+    norms = jnp.linalg.norm(sketches, axis=1) * jnp.linalg.norm(mean)
+    cos = dots / jnp.maximum(norms, 1e-12)
+    return np.asarray((chi + cos) / (chi + 1.0))

@@ -1,0 +1,8 @@
+from repro.data.video_caching import (Catalog, RequestStream, UserModel,
+                                      make_population, D1_DIM)
+from repro.data.synthetic import (make_train_batch, train_batch_shapes,
+                                  learnable_sequence_batch)
+
+__all__ = ["Catalog", "RequestStream", "UserModel", "make_population",
+           "D1_DIM", "make_train_batch", "train_batch_shapes",
+           "learnable_sequence_batch"]

@@ -1,0 +1,6 @@
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.scored_reduce import osafl_scores_fused, scored_reduce
+
+__all__ = ["ops", "ref", "flash_attention_bhsd", "osafl_scores_fused",
+           "scored_reduce"]

@@ -1,0 +1,37 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode; on a real TPU set
+REPRO_PALLAS_INTERPRET=0 to compile them natively.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.scored_reduce import osafl_scores_fused, scored_reduce
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None):
+    """Model-layout wrapper: q (B,S,H,D), k/v (B,S,Hkv,D) -> (B,S,H,D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, scale=scale,
+                               interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def osafl_scores(d_stacked, chi: float = 1.0):
+    """Fused OSAFL score computation; d_stacked (U, N)."""
+    return osafl_scores_fused(d_stacked, chi, interpret=_interpret())
+
+
+def fused_scored_reduce(d_stacked, mean):
+    return scored_reduce(d_stacked, mean, interpret=_interpret())

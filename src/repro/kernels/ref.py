@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal=True, scale=None):
+    """q: (B,H,S,D); k/v: (B,Hkv,S,D). Returns (B,H,S,D)."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def scored_reduce_reference(d, mean):
+    """d: (U,N); mean: (N,) -> (dots, norms_sq, mean_sq)."""
+    d32 = d.astype(jnp.float32)
+    m32 = mean.astype(jnp.float32)
+    return (d32 @ m32, jnp.sum(d32 * d32, axis=1), jnp.sum(m32 * m32))
+
+
+def osafl_scores_reference(d, chi: float = 1.0):
+    mean = jnp.mean(d.astype(jnp.float32), axis=0)
+    dots, norms, msq = scored_reduce_reference(d, mean)
+    cos = dots / jnp.maximum(jnp.sqrt(norms) * jnp.sqrt(msq), 1e-12)
+    return (chi + cos) / (chi + 1.0)

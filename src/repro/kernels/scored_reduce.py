@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for the OSAFL score hot-spot (paper eqs. 19-20).
+
+Given U stacked client updates d (U, N) and the mean update (N,), one fused
+pass over HBM computes everything the score needs:
+
+    dots[u]   = <d_u, mean>
+    norms[u]  = ||d_u||^2
+    mean_sq   = ||mean||^2
+
+Naively this is three separate O(U*N) reductions reading d twice and mean
+twice; the fused kernel streams each operand exactly once through VMEM
+(block (U, BLOCK_N)) and accumulates in the (sequential) grid dimension.
+On CPU it is validated with interpret=True against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 2048
+
+
+def _scored_kernel(d_ref, mean_ref, dots_ref, norms_ref, msq_ref):
+    i = pl.program_id(0)
+    d = d_ref[...].astype(jnp.float32)          # (U, bn)
+    m = mean_ref[...].astype(jnp.float32)       # (1, bn)
+
+    @pl.when(i == 0)
+    def _init():
+        dots_ref[...] = jnp.zeros_like(dots_ref)
+        norms_ref[...] = jnp.zeros_like(norms_ref)
+        msq_ref[...] = jnp.zeros_like(msq_ref)
+
+    dots_ref[...] += jnp.sum(d * m, axis=1, keepdims=True)
+    norms_ref[...] += jnp.sum(d * d, axis=1, keepdims=True)
+    msq_ref[...] += jnp.sum(m * m, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def scored_reduce(d, mean, *, block_n=DEFAULT_BLOCK_N, interpret=True):
+    """d: (U, N); mean: (N,) -> (dots (U,), norms_sq (U,), mean_sq ())."""
+    U, N = d.shape
+    block_n = min(block_n, N)
+    pad = (-N) % block_n
+    if pad:
+        d = jnp.pad(d, ((0, 0), (0, pad)))
+        mean = jnp.pad(mean, (0, pad))
+    Np = N + pad
+    grid = (Np // block_n,)
+    dots, norms, msq = pl.pallas_call(
+        _scored_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((U, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((U, 1), lambda i: (0, 0)),
+            pl.BlockSpec((U, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((U, 1), jnp.float32),
+            jax.ShapeDtypeStruct((U, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d, mean.reshape(1, Np))
+    return dots[:, 0], norms[:, 0], msq[0, 0]
+
+
+def osafl_scores_fused(d, chi: float = 1.0, *, interpret=True):
+    """End-to-end scored weights from stacked updates d (U, N):
+    lambda_u = (chi + cos(d_u, mean)) / (chi + 1)."""
+    U = d.shape[0]
+    mean = jnp.mean(d, axis=0)
+    dots, norms, msq = scored_reduce(d, mean, interpret=interpret)
+    cos = dots / jnp.maximum(jnp.sqrt(norms) * jnp.sqrt(msq), 1e-12)
+    return (chi + cos) / (chi + 1.0)

@@ -1,0 +1,360 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on the
+production meshes, record memory/cost/collective analysis for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-v3-671b \
+      --shape train_4k [--multipod] [--engine exact_tp|recompute|fedavg] \
+      [--sketch K] [--out experiments/dryrun]
+
+No real arrays are allocated: parameters/batches/caches enter as
+ShapeDtypeStructs via jax.eval_shape.
+"""
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPE_BY_NAME, TRANSFORMER_ARCHS, get_config
+from repro.configs.base import FLConfig, InputShape, ModelConfig
+from repro.core.pod import (make_fedavg_train_step, make_prefill_step,
+                            make_recompute_train_step, make_serve_step,
+                            make_stale_score_train_step, make_tp_train_step)
+from repro.data.synthetic import train_batch_shapes
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_axes, batch_shardings,
+                                   cache_shardings, param_shardings)
+from repro.models.transformer import init_cache, init_model
+
+# v5e roofline constants
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+# >100B MoE archs need FSDP (replicas can't fit TP-only) -> recompute engine
+FSDP_ARCHS = {"deepseek-v3-671b", "arctic-480b"}
+
+
+def default_engine(arch: str) -> str:
+    return "recompute" if arch in FSDP_ARCHS else "exact_tp"
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_model(k, cfg), key)
+
+
+def input_specs(arch: str, shape_name: str, *, num_clients: int = 16):
+    """ShapeDtypeStruct stand-ins for every model input of this combo."""
+    cfg = get_config(arch)
+    shp = INPUT_SHAPE_BY_NAME[shape_name]
+    params = abstract_params(cfg)
+    if shp.kind == "train":
+        batch = train_batch_shapes(cfg, shp.global_batch, shp.seq_len)
+        return cfg, shp, params, batch
+    if shp.kind == "prefill":
+        seq = shp.seq_len
+        if cfg.encoder is not None:
+            seq = min(seq, cfg.encoder.max_decoder_len)
+        batch = train_batch_shapes(cfg, shp.global_batch, seq)
+        batch.pop("labels")
+        return cfg, shp, params, batch
+    # decode
+    L = shp.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, shp.global_batch, L))
+    tokens = jax.ShapeDtypeStruct((shp.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    memory = None
+    if cfg.encoder is not None:
+        memory = jax.ShapeDtypeStruct(
+            (shp.global_batch, cfg.encoder.n_frames, cfg.d_model),
+            jnp.bfloat16)
+    if cfg.vision is not None:
+        memory = jax.ShapeDtypeStruct(
+            (shp.global_batch, cfg.vision.n_patches, cfg.d_model),
+            jnp.bfloat16)
+    return cfg, shp, params, {"cache": cache, "tokens": tokens, "pos": pos,
+                              "memory": memory}
+
+
+def skip_reason(cfg: ModelConfig, shp: InputShape) -> str | None:
+    if shp.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention architecture: 500k decode cache is unbounded; "
+                "skipped per DESIGN.md long_500k applicability table")
+    return None
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                engine: str | None = None, sketch: int = 0,
+                remat: bool = False, kappa: int = 1,
+                fl: FLConfig | None = None):
+    """Build the jitted step for one combo and lower+compile it on the mesh.
+    Returns (compiled, meta dict)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, shp, params, inputs = input_specs(arch, shape_name)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=True)
+    reason = skip_reason(cfg, shp)
+    if reason:
+        return None, {"arch": arch, "shape": shape_name, "skipped": reason}
+    engine = engine or default_engine(arch)
+    fl = fl or FLConfig(kappa_max=kappa)
+    # Weight placement per shape kind (§Perf B1/E3): FSDP for training
+    # (grad/step sharding) and for batched decode (the per-layer gather
+    # amortizes over the 128-request batch and beats TP-only weight reads);
+    # weights-stationary TP for prefill, where FSDP-sharded weights made XLA
+    # contract attention over a sharded head_dim and all-reduce full
+    # (B,H,S,S) score tensors (the 702s -> 59s B1 win).
+    fsdp = engine == "recompute" and shp.kind != "prefill"
+    pshard = param_shardings(params, mesh, fsdp=fsdp)
+    axes = batch_axes(mesh)
+
+    with jax.sharding.set_mesh(mesh):
+        if shp.kind == "train":
+            if engine == "exact_tp":
+                step = make_tp_train_step(cfg, fl, mesh, sketch_dim=sketch)
+            elif engine == "recompute":
+                # per-client microbatch must divide the client-axis rows
+                n_rows = 1
+                for a in axes:
+                    n_rows *= mesh.shape[a]
+                U = min(fl.num_clients, max(1, shp.global_batch // n_rows))
+                # reshape batch into (U, b, ...) client groups
+                inputs = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        (U, s.shape[0] // U) + s.shape[1:], s.dtype), inputs)
+                gspecs = jax.tree.map(lambda s: s.spec, pshard)
+                step = make_recompute_train_step(cfg, fl, mesh, U,
+                                                 grad_specs=gspecs)
+            elif engine == "stale":
+                n_rows = 1
+                for a in axes:
+                    n_rows *= mesh.shape[a]
+                U = min(fl.num_clients, max(1, shp.global_batch // n_rows))
+                inputs = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        (U, s.shape[0] // U) + s.shape[1:], s.dtype), inputs)
+                gspecs = jax.tree.map(lambda s: s.spec, pshard)
+                fsdp = True
+                pshard = param_shardings(params, mesh, fsdp=True)
+                gspecs = jax.tree.map(lambda s: s.spec, pshard)
+                base = make_stale_score_train_step(cfg, fl, mesh, U,
+                                                   grad_specs=gspecs)
+            elif engine == "fedavg":
+                step = make_fedavg_train_step(cfg, fl, mesh)
+            else:
+                raise ValueError(engine)
+            grouped = engine in ("recompute", "stale")
+            bshard = jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, P(*((None, axes) if grouped else (axes,)),
+                            *([None] * (s.ndim - (2 if grouped else 1))))),
+                inputs)
+            if engine == "stale":
+                lam = jax.ShapeDtypeStruct((U,), jnp.float32)
+                lshard = NamedSharding(mesh, P())
+                jf = jax.jit(base, in_shardings=(pshard, lshard, bshard),
+                             out_shardings=(pshard, lshard, None))
+                lowered = jf.lower(params, lam, inputs)
+            else:
+                jf = jax.jit(step, in_shardings=(pshard, bshard),
+                             out_shardings=(pshard, None))
+                lowered = jf.lower(params, inputs)
+        elif shp.kind == "prefill":
+            step = make_prefill_step(cfg)
+            bshard = batch_shardings(inputs, mesh)
+            jf = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = jf.lower(params, inputs)
+        else:  # decode
+            step = make_serve_step(cfg)
+            cshard = cache_shardings(inputs["cache"], mesh, shp.global_batch)
+            tshard = NamedSharding(
+                mesh, P(axes) if shp.global_batch > 1 else P())
+            mshard = None
+            if inputs["memory"] is not None:
+                mshard = NamedSharding(
+                    mesh, P(axes if shp.global_batch > 1 else None, None,
+                            "model"))
+            jf = jax.jit(step, in_shardings=(
+                pshard, cshard, tshard, NamedSharding(mesh, P()), mshard),
+                out_shardings=(tshard, cshard))
+            lowered = jf.lower(params, inputs["cache"], inputs["tokens"],
+                               inputs["pos"], inputs["memory"])
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    meta = {"arch": arch, "shape": shape_name, "engine": engine,
+            "multi_pod": multi_pod, "sketch": sketch,
+            "compile_s": compile_s, "mesh": dict(
+                zip(mesh.axis_names, mesh.devices.shape))}
+    return compiled, meta
+
+
+def model_flops(cfg: ModelConfig, shp: InputShape) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE), D = tokens/step."""
+    n_active = active_params(cfg)
+    if shp.kind == "train":
+        d = shp.global_batch * shp.seq_len
+        return 6.0 * n_active * d
+    if shp.kind == "prefill":
+        seq = shp.seq_len
+        if cfg.encoder is not None:
+            seq = min(seq, cfg.encoder.max_decoder_len)
+        return 2.0 * n_active * shp.global_batch * seq
+    return 2.0 * n_active * shp.global_batch          # decode: 1 token
+
+
+def total_params(cfg: ModelConfig) -> int:
+    import math
+    params = abstract_params(cfg)
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameters touched per token (MoE: top_k of num_experts experts)."""
+    params = abstract_params(cfg)
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = float(np.prod(leaf.shape))
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if cfg.moe and any(n2 in ("moe",) for n2 in names) and \
+                names[-1] in ("w_gate", "w_up", "w_down"):
+            n *= cfg.moe.top_k / cfg.moe.num_experts
+        total += n
+    return total
+
+
+def roofline(compiled, meta, cfg: ModelConfig, shp: InputShape) -> dict:
+    n_chips = 512 if meta["multi_pod"] else 256
+    seq = shp.seq_len if shp.kind in ("train", "prefill") else 0
+    analysis = analyze_hlo(compiled.as_text(), seq_len=seq)
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    per_dev_flops = analysis.flops
+    global_flops = per_dev_flops * n_chips
+    per_dev_coll = analysis.total_collective_bytes
+    per_dev_traffic = analysis.traffic_bytes
+    compute_s = global_flops / (n_chips * PEAK_FLOPS)
+    memory_s = per_dev_traffic / HBM_BW
+    collective_s = per_dev_coll / ICI_BW
+    # flash projection: the Pallas kernel (kernels/flash_attention.py,
+    # validated in interpret mode) keeps (seq x seq) score tensors in VMEM;
+    # kv re-reads at block_q=1024 add <= S/1024 * (K+V) bytes (small). The
+    # projected memory term removes in-HBM score traffic. Reported alongside
+    # the XLA-path baseline, never instead of it.
+    memory_s_flash = (per_dev_traffic - analysis.score_traffic_bytes) / HBM_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shp)
+    out = {
+        **meta,
+        "n_chips": n_chips,
+        "per_device": {
+            "flops": per_dev_flops,
+            "traffic_bytes": per_dev_traffic,
+            "collective_bytes": dict(analysis.collective_bytes),
+            "collective_counts": dict(analysis.collective_counts),
+            "xla_cost_flops_unscaled": float(ca.get("flops", -1)),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "peak_bytes": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes,
+            },
+        },
+        "roofline": {**terms, "dominant": dominant,
+                     "memory_s_flash_projected": memory_s_flash,
+                     "score_traffic_bytes": analysis.score_traffic_bytes,
+                     "step_time_lower_bound_s": max(terms.values())},
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(global_flops, 1.0),
+        "total_params": total_params(cfg),
+        "active_params": active_params(cfg),
+    }
+    return out
+
+
+def run_one(arch, shape_name, *, multi_pod=False, engine=None, sketch=0,
+            remat=False, kappa=1, out_dir="experiments/dryrun",
+            save_hlo=False, verbose=True):
+    compiled, meta = lower_combo(arch, shape_name, multi_pod=multi_pod,
+                                 engine=engine, sketch=sketch, remat=remat,
+                                 kappa=kappa)
+    meta["remat"] = remat
+    meta["kappa"] = kappa
+    if compiled is None:
+        rec = meta
+    else:
+        cfg = get_config(arch)
+        shp = INPUT_SHAPE_BY_NAME[shape_name]
+        rec = roofline(compiled, meta, cfg, shp)
+        if verbose:
+            print(compiled.memory_analysis())
+            ca = compiled.cost_analysis()
+            if ca:
+                print({k: v for k, v in ca.items() if "flops" in k})
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    suffix = "multipod" if multi_pod else "pod"
+    if engine:
+        suffix += f"_{engine}"
+    if sketch:
+        suffix += f"_sketch{sketch}"
+    if remat:
+        suffix += "_remat"
+    if kappa > 1:
+        suffix += f"_kappa{kappa}"
+    fn = out / f"{arch}__{shape_name}__{suffix}.json"
+    fn.write_text(json.dumps(rec, indent=2, default=float))
+    if verbose:
+        rl = rec.get("roofline")
+        if rl:
+            print(f"{arch} x {shape_name} [{suffix}]: dominant={rl['dominant']}"
+                  f" compute={rl['compute_s']:.4f}s memory={rl['memory_s']:.4f}s"
+                  f" collective={rl['collective_s']:.4f}s")
+        else:
+            print(f"{arch} x {shape_name}: SKIPPED — {rec['skipped']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--engine", default=None)
+    ap.add_argument("--sketch", type=int, default=0)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--kappa", type=int, default=1)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    archs = TRANSFORMER_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPE_BY_NAME) if args.shape == "all" else [args.shape]
+    for a in archs:
+        for s in shapes:
+            t0 = time.time()
+            try:
+                run_one(a, s, multi_pod=args.multipod, engine=args.engine,
+                        sketch=args.sketch, remat=args.remat,
+                        kappa=args.kappa, out_dir=args.out)
+            except Exception as e:
+                import traceback
+                print(f"FAIL {a} x {s}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+            print(f"  ({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""HLO text analyzer: loop-aware FLOP / collective-byte / traffic accounting.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE, which makes
+scan-over-layers models look ~n_layers times cheaper than they are. This
+module parses ``compiled.as_text()`` into computations, builds the call graph
+(while/fusion/call/conditional), reads ``known_trip_count`` from while
+backend_configs, and accumulates:
+
+  * flops            — 2*prod(result)*prod(contracted) for dots,
+                       rough kernel-volume estimate for convolutions
+  * collective_bytes — per collective kind (all-reduce, all-gather,
+                       reduce-scatter, all-to-all, collective-permute),
+                       *per-device* bytes (post-SPMD module shapes)
+  * traffic_bytes    — sum of op result+operand bytes at fusion granularity
+                       (HBM traffic proxy)
+
+All numbers are per-device; multiply by chip count for mesh totals.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\{\s*$")
+_CALLED_RE = re.compile(
+    r"(?:body|to_apply|calls|branch_computations|condition)="
+    r"\{?(%[\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"{:n ]+([0-9]+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                       # operands + attributes (raw tail)
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)   # op name -> type
+
+
+def parse_module(txt: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in txt.splitlines():
+        line = comment_re.sub("", line)
+        mc = _COMP_RE.match(line) if line and not line.startswith(" ") else None
+        if mc:
+            name = mc.group(1).lstrip("%")
+            cur = Computation(name)
+            comps[name] = cur
+            continue
+        m = _OP_RE.match(line)
+        if m and cur is not None:
+            name, type_str, opcode, rest = m.groups()
+            operands = re.findall(r"%[\w.\-]+", rest.split("),")[0])
+            op = Op(name.lstrip("%"), type_str.strip(), opcode, rest,
+                    [o.lstrip("%") for o in operands])
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.type_str
+    return comps
+
+
+def _dims_prod(type_str: str, dims: List[int]) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 1
+    shape = [int(d) for d in m.group(2).split(",") if d]
+    out = 1
+    for d in dims:
+        if d < len(shape):
+            out *= shape[d]
+    return out
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    result = shape_elems(op.type_str)
+    lhs = op.operands[0] if op.operands else None
+    lhs_type = comp.symbols.get(lhs, "")
+    mcd = _CONTRACT_RE.search(op.rest)
+    contracted = 1
+    if mcd and lhs_type:
+        dims = [int(d) for d in mcd.group(1).split(",") if d]
+        contracted = _dims_prod(lhs_type, dims)
+    return 2.0 * result * contracted
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    result = shape_elems(op.type_str)
+    ker = op.operands[1] if len(op.operands) > 1 else None
+    ker_type = comp.symbols.get(ker, "")
+    ker_elems = shape_elems(ker_type)
+    m = _SHAPE_RE.search(op.type_str)
+    out_feat = 1
+    if m:
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out_feat = dims[-1] if dims else 1
+    return 2.0 * result * max(ker_elems // max(out_feat, 1), 1)
+
+
+@dataclass
+class Analysis:
+    flops: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    traffic_bytes: float = 0.0
+    # HBM traffic of (seq x seq) score-shaped tensors: what a fused flash
+    # attention kernel keeps in VMEM (see roofline flash projection)
+    score_traffic_bytes: float = 0.0
+    seq_len: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops,
+                "collective_bytes": dict(self.collective_bytes),
+                "collective_counts": dict(self.collective_counts),
+                "total_collective_bytes": self.total_collective_bytes,
+                "traffic_bytes": self.traffic_bytes}
+
+
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "copy", "after-all", "partition-id"}
+
+
+def _called_computations(op: Op) -> List[str]:
+    out = []
+    for m in _CALLED_RE.finditer(op.rest):
+        for nm in m.group(1).split(","):
+            nm = nm.strip().lstrip("%")
+            if nm:
+                out.append(nm)
+    return out
+
+
+def _is_score_shaped(type_str: str, seq_len: int) -> bool:
+    if seq_len < 2048:
+        return False
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return False
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return sum(1 for d in dims if d == seq_len) >= 2
+
+
+def analyze_computation(name: str, comps: Dict[str, Computation],
+                        acc: Analysis, multiplier: float,
+                        in_fusion: bool = False, _depth: int = 0) -> None:
+    comp = comps.get(name)
+    if comp is None or _depth > 64:
+        return
+    for op in comp.ops:
+        oc = op.opcode
+        base = oc.replace("-start", "")
+        if base in COLLECTIVES and not oc.endswith("-done"):
+            if base in ("reduce-scatter", "all-to-all"):
+                # count the (larger) input side
+                b = sum(shape_bytes(comp.symbols.get(o, ""))
+                        for o in op.operands)
+                b = max(b, shape_bytes(op.type_str))
+            else:
+                b = shape_bytes(op.type_str)
+            acc.collective_bytes[base] += b * multiplier
+            acc.collective_counts[base] += multiplier
+        elif oc == "dot":
+            acc.flops += _dot_flops(op, comp) * multiplier
+        elif oc == "convolution":
+            acc.flops += _conv_flops(op, comp) * multiplier
+        # traffic at fusion granularity: don't descend into fusions for bytes
+        if not in_fusion and oc not in _SKIP_TRAFFIC:
+            rb = shape_bytes(op.type_str)
+            ob = sum(shape_bytes(comp.symbols.get(o, "")) for o in op.operands)
+            acc.traffic_bytes += (rb + ob) * multiplier
+            if acc.seq_len and _is_score_shaped(op.type_str, acc.seq_len):
+                acc.score_traffic_bytes += (rb + ob) * multiplier
+        # recurse into called computations
+        if oc == "while":
+            trip = 1.0
+            mt = _TRIP_RE.search(op.rest)
+            if mt:
+                trip = float(mt.group(1))
+            called = _called_computations(op)
+            # body only (condition is cheap)
+            for c in called:
+                if "region" in c or "body" in c or "while" in c:
+                    analyze_computation(c, comps, acc, multiplier * trip,
+                                        in_fusion, _depth + 1)
+        elif oc in ("fusion",):
+            for c in _called_computations(op):
+                analyze_computation(c, comps, acc, multiplier, True,
+                                    _depth + 1)
+        elif oc in ("call", "conditional", "custom-call", "reduce", "sort",
+                    "scatter", "select-and-scatter", "map", "reduce-window"):
+            for c in _called_computations(op):
+                analyze_computation(c, comps, acc, multiplier, in_fusion,
+                                    _depth + 1)
+
+
+def top_collectives(txt: str, n: int = 12) -> list:
+    """The n largest collective ops (per-device bytes x trip count), with
+    shapes and source metadata — the §Perf diagnosis tool."""
+    comps = parse_module(txt)
+    trip_of: Dict[str, float] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "while":
+                mt = _TRIP_RE.search(op.rest)
+                trip = float(mt.group(1)) if mt else 1.0
+                for c in _called_computations(op):
+                    trip_of[c] = max(trip_of.get(c, 1.0), trip)
+    out = []
+    for cname, comp in comps.items():
+        mult = trip_of.get(cname, 1.0)
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                b = shape_bytes(op.type_str)
+                meta = ""
+                mm = re.search(r'op_name="([^"]*)"', op.rest)
+                if mm:
+                    meta = mm.group(1)[:90]
+                out.append({"kind": base, "bytes": b * mult, "trip": mult,
+                            "shape": op.type_str[:80], "op": meta})
+    out.sort(key=lambda r: -r["bytes"])
+    return out[:n]
+
+
+def top_traffic(txt: str, n: int = 12) -> list:
+    """The n largest HBM-traffic ops (result+operand bytes x trip count)."""
+    comps = parse_module(txt)
+    trip_of: Dict[str, float] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "while":
+                mt = _TRIP_RE.search(op.rest)
+                trip = float(mt.group(1)) if mt else 1.0
+                for c in _called_computations(op):
+                    trip_of[c] = max(trip_of.get(c, 1.0), trip)
+    out = []
+    for cname, comp in comps.items():
+        if "fused" in cname:
+            continue
+        mult = trip_of.get(cname, 1.0)
+        for op in comp.ops:
+            if op.opcode in _SKIP_TRAFFIC:
+                continue
+            rb = shape_bytes(op.type_str)
+            ob = sum(shape_bytes(comp.symbols.get(o, "")) for o in op.operands)
+            meta = ""
+            mm = re.search(r'op_name="([^"]*)"', op.rest)
+            if mm:
+                meta = mm.group(1)[:90]
+            out.append({"opcode": op.opcode, "bytes": (rb + ob) * mult,
+                        "trip": mult, "shape": op.type_str[:60], "op": meta})
+    out.sort(key=lambda r: -r["bytes"])
+    return out[:n]
+
+
+def analyze_hlo(txt: str, seq_len: int = 0) -> Analysis:
+    comps = parse_module(txt)
+    entry = None
+    for line in txt.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1).lstrip("%")
+            break
+    if entry is None:
+        # fall back: computation with most ops
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+    acc = Analysis(seq_len=seq_len)
+    analyze_computation(entry, comps, acc, 1.0)
+    return acc

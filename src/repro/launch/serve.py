@@ -1,0 +1,84 @@
+"""Batched serving driver: prefill + decode loop with the sharded KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m --reduced \
+      --batch 4 --prompt-len 32 --decode-steps 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.pod import make_serve_step
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import (decode_step, init_cache, init_model)
+from repro.models.transformer import whisper_encode
+
+
+def run(arch: str, *, reduced=True, batch=4, prompt_len=32, decode_steps=16,
+        cache_len=128, seed=0, verbose=True):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(seed)
+    params = init_model(key, cfg)
+    memory = None
+    if cfg.encoder is not None:
+        frames = 0.02 * jax.random.normal(
+            key, (batch, cfg.encoder.n_frames, cfg.d_model))
+        memory = whisper_encode(params, frames, cfg)
+        cache_len = min(cache_len, cfg.encoder.max_decoder_len)
+    if cfg.vision is not None:
+        patches = 0.02 * jax.random.normal(
+            key, (batch, cfg.vision.n_patches, cfg.vision.d_vision))
+        memory = patches.astype(jnp.bfloat16) @ params["vision_proj"].astype(
+            jnp.bfloat16)
+
+    cache = init_cache(cfg, batch, cache_len)
+    prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    serve = jax.jit(make_serve_step(cfg))
+
+    with jax.sharding.set_mesh(mesh):
+        # prefill via sequential decode (cache-exact; a fused prefill kernel
+        # is the production path, exercised by the prefill_32k dry-run)
+        t0 = time.time()
+        tok = prompt[:, :1]
+        for i in range(prompt_len):
+            tok = prompt[:, i:i + 1]
+            nxt, cache = serve(params, cache, tok, jnp.int32(i), memory)
+        prefill_s = time.time() - t0
+        out = []
+        t0 = time.time()
+        tok = nxt
+        for i in range(decode_steps):
+            tok, cache = serve(params, cache, tok,
+                               jnp.int32(prompt_len + i), memory)
+            out.append(tok)
+        decode_s = time.time() - t0
+    tokens = jnp.concatenate(out, axis=1)
+    if verbose:
+        print(f"{cfg.name}: prefill {prompt_len} toks in {prefill_s:.2f}s; "
+              f"decoded {decode_steps} toks in {decode_s:.2f}s "
+              f"({batch * decode_steps / max(decode_s, 1e-9):.1f} tok/s)")
+        print("sampled token ids:", tokens[0][:12].tolist())
+    return tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-350m")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-steps", type=int, default=16)
+    args = ap.parse_args()
+    run(args.arch, reduced=not args.full, batch=args.batch,
+        prompt_len=args.prompt_len, decode_steps=args.decode_steps)
+
+
+if __name__ == "__main__":
+    main()

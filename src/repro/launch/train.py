@@ -1,0 +1,106 @@
+"""Config-driven trainer: runs the pod-scale OSAFL engines for real (on the
+host mesh; the production mesh is exercised by dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --reduced \
+      --steps 50 --engine exact_tp [--sketch 64] [--ckpt out.npz]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.configs import get_config
+from repro.configs.base import FLConfig
+from repro.core.pod import (make_fedavg_train_step, make_recompute_train_step,
+                            make_stale_score_train_step, make_tp_train_step)
+from repro.data.synthetic import learnable_sequence_batch, make_train_batch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import param_shardings
+from repro.models.transformer import init_model, param_count
+
+
+def run(arch: str, *, reduced=True, steps=20, engine="exact_tp", sketch=0,
+        batch=8, seq=64, lr=0.1, global_lr=1.0, num_clients=None,
+        learnable=True, ckpt=None, log_every=5, seed=0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    fl = FLConfig(kappa_max=1, local_lr=lr, global_lr=global_lr,
+                  num_clients=num_clients or mesh.shape["data"],
+                  score_sketch_dim=sketch)
+    key = jax.random.PRNGKey(seed)
+    params = init_model(key, cfg)
+    print(f"{cfg.name}: {param_count(params) / 1e6:.1f}M params, "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+          f"engine={engine}")
+
+    with jax.sharding.set_mesh(mesh):
+        if engine == "exact_tp":
+            step = make_tp_train_step(cfg, fl, mesh, sketch_dim=sketch)
+        elif engine == "recompute":
+            step = make_recompute_train_step(cfg, fl, mesh, fl.num_clients)
+        elif engine == "stale":
+            step = make_stale_score_train_step(cfg, fl, mesh, fl.num_clients)
+        elif engine == "fedavg":
+            step = make_fedavg_train_step(cfg, fl, mesh)
+        else:
+            raise ValueError(engine)
+        jstep = jax.jit(step)
+        lam = jnp.ones((fl.num_clients,), jnp.float32)
+        history = []
+        for t in range(steps):
+            key, bk = jax.random.split(key)
+            if learnable:
+                b = learnable_sequence_batch(bk, cfg, batch, seq)
+            else:
+                b = make_train_batch(bk, cfg, batch, seq)
+            if engine in ("recompute", "stale"):
+                b = jax.tree.map(
+                    lambda x: x.reshape((fl.num_clients, -1) + x.shape[1:]),
+                    b)
+            t0 = time.time()
+            if engine == "stale":
+                params, lam, metrics = jstep(params, lam, b)
+            else:
+                params, metrics = jstep(params, b)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_s"] = time.time() - t0
+            history.append(metrics)
+            if t % log_every == 0 or t == steps - 1:
+                lam_m = metrics.get("lambda_mean")
+                print(f"step {t:4d} loss={metrics['loss']:.4f}"
+                      + (f" lambda={lam_m:.4f}" if lam_m is not None else "")
+                      + f" ({metrics['step_s']:.2f}s)")
+    if ckpt:
+        checkpoint.save(ckpt, params, step=steps)
+        print(f"saved checkpoint -> {ckpt}")
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-reduced) config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--engine", default="exact_tp",
+                    choices=["exact_tp", "recompute", "stale", "fedavg"])
+    ap.add_argument("--sketch", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    run(args.arch, reduced=not args.full, steps=args.steps,
+        engine=args.engine, sketch=args.sketch, batch=args.batch,
+        seq=args.seq, lr=args.lr, ckpt=args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

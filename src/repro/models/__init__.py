@@ -1,0 +1,6 @@
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_model, loss_fn, param_count)
+from repro.models.small import init_small, small_forward, small_loss
+
+__all__ = ["decode_step", "forward", "init_cache", "init_model", "loss_fn",
+           "param_count", "init_small", "small_forward", "small_loss"]

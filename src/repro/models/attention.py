@@ -1,0 +1,295 @@
+"""Attention variants: GQA (opt. bias / sliding window), MLA, cross-attention.
+
+All functions are pure; KV caches are explicit pytrees threaded through.
+Cache layout (full attention): {"k": (B, L, n_kv, hd), "v": (B, L, n_kv, hd)}
+with the current write position passed separately (static-shape friendly).
+Sliding-window caches are ring buffers of length ``window``.
+MLA decode caches the *compressed latent* (B, L, kv_lora_rank) + shared rope key,
+using the absorbed-matmul formulation (DeepSeek-V2 §2.1) so cache bytes are
+independent of the number of heads.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,S,H,D) k/v: (B,L,Hkv,D[v]) mask: broadcastable (B,1,S,L) or None."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        if S > 1:
+            # constrain AFTER the repeat: sharding Hkv(<TP degree) heads
+            # directly forces uneven/padded layouts + involuntary remat
+            # (§Perf B3). Decode (S==1) must NOT constrain here — it would
+            # materialize the repeated KV cache (§Perf E1 regression).
+            k = shard_heads(k)
+            v = shard_heads(v)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def causal_mask(s_q: int, s_k: int, q_offset=0, window: int = 0):
+    """(1,1,S,L) boolean mask; window>0 limits lookback (sliding window)."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m = m & (qi - kj < window)
+    return m[None, None]
+
+
+def use_flash() -> bool:
+    return os.environ.get("REPRO_USE_FLASH", "0") == "1"
+
+
+def shard_heads(x, axis: int = 2):
+    """Constrain the heads axis of (B, S, H, D) to the 'model' mesh axis.
+
+    §Perf iteration B2: without this, architectures whose head count does not
+    divide the model axis (arctic: 56 heads on 16-way TP) let the partitioner
+    shard the *head_dim* (contracting) axis instead, which turns every
+    attention score matmul into a full (B,H,S,S) all-reduce. Forcing (padded)
+    head sharding trades <=14% head padding for that all-reduce. No-op when
+    no mesh with a 'model' axis is ambient. Set REPRO_ACT_SHARDING=0 to
+    reproduce the unconstrained baseline."""
+    if os.environ.get("REPRO_ACT_SHARDING", "1") != "1":
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+            return x
+        spec = [None] * x.ndim
+        spec[axis] = "model"
+        from jax.sharding import PartitionSpec
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+    except Exception:
+        return x
+
+
+def _attention(q, k, v, mask, scale, *, causal_full: bool):
+    """Dispatch: Pallas flash kernel (interpret on CPU) or XLA reference."""
+    if use_flash() and causal_full and q.shape[1] == k.shape[1]:
+        from repro.kernels import ops  # lazy: kernels are optional at import time
+        return ops.flash_attention(q, k, v, causal=True, scale=scale)
+    return _sdpa(q, k, v, mask, scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, Hkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, Hkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype=dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype=dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype=dtype)
+    return p
+
+
+def gqa_fwd(params, x, cfg: ModelConfig, positions, *, cache=None,
+            cache_pos=None, causal: bool = True, rope: bool = True):
+    """x: (B,S,d). Training/prefill when cache is None; else single-step decode
+    (S==1) writing into the cache at ``cache_pos``.
+
+    Returns (y, new_cache)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if S > 1:
+        # decode (S==1) is excluded: constraining single-token q/kv reshards
+        # the KV cache instead of helping (§Perf E1)
+        q = shard_heads(q)
+        if Hkv == H:
+            k = shard_heads(k)
+            v = shard_heads(v)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    scale = hd ** -0.5
+    window = cfg.sliding_window
+
+    if cache is None:
+        mask = causal_mask(S, S, window=window) if causal else None
+        o = _attention(q, k, v, mask, scale,
+                       causal_full=causal and window == 0)
+        new_cache = None
+    else:
+        # decode: S == 1
+        L = cache["k"].shape[1]
+        if window > 0:
+            slot = cache_pos % L                      # ring buffer (L == window)
+        else:
+            slot = cache_pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        idx = jnp.arange(L)
+        if window > 0:
+            # ring buffer: absolute position of slot j
+            abs_pos = cache_pos - ((slot - idx) % L)
+            valid = (abs_pos >= 0) & (abs_pos <= cache_pos)
+        else:
+            valid = idx <= cache_pos
+        mask = valid[None, None, None, :]
+        o = _sdpa(q, ck.astype(dt), cv.astype(dt), mask, scale)
+        new_cache = {"k": ck, "v": cv}
+    y = o.reshape(B, S, H * hd) @ params["wo"].astype(dt)
+    return y, new_cache
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    L = min(length, cfg.sliding_window) if cfg.sliding_window else length
+    shape = (batch, L, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM image layers, whisper decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(key, cfg: ModelConfig, d_memory: int, dtype=jnp.float32):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, H * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d_memory, Hkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d_memory, Hkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype=dtype),
+    }
+
+
+def cross_attn_fwd(params, x, memory, cfg: ModelConfig):
+    """x: (B,S,d); memory: (B,M,d_mem). Full (non-causal) attention over memory."""
+    B, S, _ = x.shape
+    M = memory.shape[1]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (memory @ params["wk"].astype(dt)).reshape(B, M, Hkv, hd)
+    v = (memory @ params["wv"].astype(dt)).reshape(B, M, Hkv, hd)
+    o = _sdpa(q, k, v, None, hd ** -0.5)
+    return o.reshape(B, S, H * hd) @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dtype=dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H * qk), dtype=dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            dtype=dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dtype=dtype),
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank,
+                                    H * (m.qk_nope_head_dim + m.v_head_dim)),
+                            dtype=dtype),
+        "wo": dense_init(ks[4], (H * m.v_head_dim, d), dtype=dtype),
+    }
+
+
+def _mla_qkv(params, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dt = x.dtype
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"].astype(dt), cfg.norm_eps)
+    q = (q @ params["wq_b"].astype(dt)).reshape(
+        B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ params["wkv_a"].astype(dt)
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)       # (B,S,rank)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,r)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_fwd(params, x, cfg: ModelConfig, positions, *, cache=None, cache_pos=None):
+    """MLA attention. Prefill/train: naive expansion. Decode: absorbed form over
+    the latent cache {"c": (B,L,rank), "k_rope": (B,L,r)}."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dt = x.dtype
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    wkv_b = params["wkv_b"].astype(dt).reshape(
+        m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    w_k = wkv_b[:, :, :m.qk_nope_head_dim]                       # (rank,H,dk)
+    w_v = wkv_b[:, :, m.qk_nope_head_dim:]                       # (rank,H,dv)
+
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, w_k)
+        v = shard_heads(jnp.einsum("bsr,rhd->bshd", c_kv, w_v))
+        k = shard_heads(jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))],
+            axis=-1))
+        q = shard_heads(jnp.concatenate([q_nope, q_rope], axis=-1))
+        mask = causal_mask(S, S)
+        o = _attention(q, k, v, mask, scale, causal_full=True)
+        new_cache = None
+    else:
+        # absorbed decode: scores = (q_nope W_k^T) c^T + q_rope k_rope^T
+        L = cache["c"].shape[1]
+        c_new = jax.lax.dynamic_update_slice(
+            cache["c"], c_kv.astype(cache["c"].dtype), (0, cache_pos, 0))
+        r_new = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+            (0, cache_pos, 0))
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_k)        # (B,1,H,rank)
+        logits = (jnp.einsum("bshr,btr->bhst", q_abs, c_new.astype(dt)) +
+                  jnp.einsum("bshd,btd->bhst", q_rope, r_new.astype(dt))) * scale
+        valid = (jnp.arange(L) <= cache_pos)[None, None, None, :]
+        logits = jnp.where(valid, logits, jnp.finfo(logits.dtype).min)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(dt)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, c_new.astype(dt))
+        o = jnp.einsum("bshr,rhd->bshd", o_lat, w_v)             # (B,1,H,dv)
+        new_cache = {"c": c_new, "k_rope": r_new}
+    y = o.reshape(B, S, H * o.shape[-1]) @ params["wo"].astype(dt)
+    return y, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"c": jnp.zeros((batch, length, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, length, m.qk_rope_head_dim), dtype)}

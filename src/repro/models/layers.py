@@ -1,0 +1,113 @@
+"""Shared neural-net building blocks (pure functional, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dense_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype),
+            "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                        # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs    # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                          # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None, dtype=jnp.float32):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_up": dense_init(k1, (d, f), dtype=dtype),
+        "w_down": dense_init(k2, (f, d), dtype=dtype),
+    }
+    if cfg.mlp == "swiglu":
+        params["w_gate"] = dense_init(k3, (d, f), dtype=dtype)
+    return params
+
+
+def mlp_fwd(params, x, kind: str):
+    dtype = x.dtype
+    up = x @ params["w_up"].astype(dtype)
+    if kind == "swiglu":
+        gate = x @ params["w_gate"].astype(dtype)
+        h = jax.nn.silu(gate) * up
+    elif kind == "relu2":                     # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(up))
+    elif kind == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return h @ params["w_down"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": dense_init(key, (vocab, d), dtype=dtype)}
+
+
+def embed(params, tokens, compute_dtype):
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(params, x):
+    return x @ params["table"].astype(x.dtype).T

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer with capacity-based sort dispatch.
+
+Design (TPU-native, expert-parallel friendly):
+  1. router: softmax logits, top-k selection, renormalized gates
+  2. dispatch: sort token-expert assignments by expert id, drop beyond a fixed
+     per-expert capacity C = ceil(T*k/E * capacity_factor) -> gather (E, C, d)
+  3. batched expert matmuls (E, C, d) x (E, d, f) — expert axis shardable
+  4. combine: scatter-add gated expert outputs back to tokens
+
+Supports DeepSeek-V3 shared experts (always-on dense experts) and Arctic's
+dense residual MLP in parallel with the MoE branch. Returns the Switch-style
+load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, init_mlp, mlp_fwd
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=dtype),
+        "w_gate": dense_init(ks[1], (E, d, f), dtype=dtype),
+        "w_up": dense_init(ks[2], (E, d, f), dtype=dtype),
+        "w_down": dense_init(ks[3], (E, f, d), dtype=dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=f * m.num_shared_experts,
+                               dtype=dtype)
+    if m.dense_residual_d_ff:
+        p["dense_residual"] = init_mlp(ks[5], cfg, d_ff=m.dense_residual_d_ff,
+                                       dtype=dtype)
+    return p
+
+
+def _capacity(T: int, k: int, E: int, factor: float) -> int:
+    c = int((T * k / E) * factor) + 1
+    return min(max(8, c), T)  # floor for tiny smokes, never exceed all tokens
+
+
+def moe_fwd(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    T = B * S
+    dt = x.dtype
+    xt = x.reshape(T, d)
+
+    # --- router ---------------------------------------------------------
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)   # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)                   # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e mean_frac_e * mean_prob_e
+    frac = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (T * k)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = m.router_aux_coef * E * jnp.sum(frac * mean_prob)
+
+    # --- dispatch (sort by expert, capacity drop) -------------------------
+    C = _capacity(T, k, E, m.capacity_factor)
+    flat_expert = expert_ids.reshape(-1)                              # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    group_start = jnp.searchsorted(se, jnp.arange(E), side="left")    # (E,)
+    pos = jnp.arange(T * k) - group_start[se]                         # slot in expert
+    keep = pos < C
+    # token table (E, C): index of the token in each expert slot; T = "empty"
+    token_table = jnp.full((E, C), T, dtype=jnp.int32)
+    token_table = token_table.at[se, jnp.where(keep, pos, 0)].set(
+        jnp.where(keep, st, T).astype(jnp.int32), mode="drop")
+    gate_table = jnp.zeros((E, C), jnp.float32).at[
+        se, jnp.where(keep, pos, 0)].set(jnp.where(keep, sg, 0.0), mode="drop")
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), dt)], axis=0)     # row T = zeros
+    xe = xt_pad[token_table]                                          # (E, C, d)
+
+    # --- expert computation (batched over E; shardable on expert axis) ----
+    gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(dt))
+    up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))   # (E, C, d)
+
+    # --- combine ----------------------------------------------------------
+    yt = jnp.zeros((T + 1, d), dt).at[token_table].add(
+        ye * gate_table[..., None].astype(dt))
+    y = yt[:T].reshape(B, S, d)
+
+    if m.num_shared_experts:
+        y = y + mlp_fwd(params["shared"], x, "swiglu")
+    if m.dense_residual_d_ff:
+        y = y + mlp_fwd(params["dense_residual"], x, "swiglu")
+    return y, aux

@@ -1,0 +1,196 @@
+"""The paper's four evaluation models, in JAX.
+
+Dataset-1 samples are 3168-dim feature vectors (Appendix D): a flattened
+3x32x32 content feature (3072) + genre preferences (5) + cosine similarities
+to the 20 files of the genre (20) + genre feature (70) + exploitation prob (1)
+= 3168. Labels: F=100 content classes.
+
+Dataset-2 samples are L=10 past content IDs -> next content ID (100 classes).
+
+Models (paper Fig. 7-8): FCN, CNN, SqueezeNet1-style, LSTM.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+NUM_CLASSES = 100
+D1_FEATURES = 3168
+IMG = (32, 32, 3)
+SIDE = D1_FEATURES - 3072
+SEQ_LEN = 10
+
+
+def _linear(key, din, dout):
+    kw, = jax.random.split(key, 1)
+    return {"w": dense_init(kw, (din, dout), scale=(2.0 / din) ** 0.5),
+            "b": jnp.zeros((dout,))}
+
+
+def _apply_linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _conv(key, k, cin, cout):
+    return {"w": dense_init(key, (k, k, cin, cout),
+                            scale=(2.0 / (k * k * cin)) ** 0.5),
+            "b": jnp.zeros((cout,))}
+
+
+def _apply_conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+# --- FCN -------------------------------------------------------------------
+
+def init_fcn(key):
+    ks = jax.random.split(key, 3)
+    return {"l1": _linear(ks[0], D1_FEATURES, 1024),
+            "l2": _linear(ks[1], 1024, 512),
+            "l3": _linear(ks[2], 512, NUM_CLASSES)}
+
+
+def fcn_forward(params, x):
+    h = jax.nn.relu(_apply_linear(params["l1"], x))
+    h = jax.nn.relu(_apply_linear(params["l2"], h))
+    return _apply_linear(params["l3"], h)
+
+
+# --- CNN -------------------------------------------------------------------
+
+def init_cnn(key):
+    ks = jax.random.split(key, 5)
+    return {"c1": _conv(ks[0], 3, 3, 32), "c2": _conv(ks[1], 3, 32, 64),
+            "f1": _linear(ks[2], 8 * 8 * 64 + SIDE, 256),
+            "f2": _linear(ks[3], 256, NUM_CLASSES)}
+
+
+def cnn_forward(params, x):
+    B = x.shape[0]
+    img = x[:, :3072].reshape(B, *IMG)
+    side = x[:, 3072:]
+    h = _maxpool(jax.nn.relu(_apply_conv(params["c1"], img)))
+    h = _maxpool(jax.nn.relu(_apply_conv(params["c2"], h)))
+    h = jnp.concatenate([h.reshape(B, -1), side], axis=-1)
+    h = jax.nn.relu(_apply_linear(params["f1"], h))
+    return _apply_linear(params["f2"], h)
+
+
+# --- SqueezeNet1-style -------------------------------------------------------
+
+def _fire(key, cin, squeeze, expand):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"s": _conv(k1, 1, cin, squeeze),
+            "e1": _conv(k2, 1, squeeze, expand),
+            "e3": _conv(k3, 3, squeeze, expand)}
+
+
+def _apply_fire(p, x):
+    s = jax.nn.relu(_apply_conv(p["s"], x))
+    return jnp.concatenate([jax.nn.relu(_apply_conv(p["e1"], s)),
+                            jax.nn.relu(_apply_conv(p["e3"], s))], axis=-1)
+
+
+def init_squeezenet(key):
+    ks = jax.random.split(key, 6)
+    return {"c1": _conv(ks[0], 3, 3, 64),
+            "fire1": _fire(ks[1], 64, 16, 64),
+            "fire2": _fire(ks[2], 128, 16, 64),
+            "fire3": _fire(ks[3], 128, 32, 128),
+            "head": _conv(ks[4], 1, 256, NUM_CLASSES),
+            "side": _linear(ks[5], SIDE, NUM_CLASSES)}
+
+
+def squeezenet_forward(params, x):
+    B = x.shape[0]
+    img = x[:, :3072].reshape(B, *IMG)
+    side = x[:, 3072:]
+    h = _maxpool(jax.nn.relu(_apply_conv(params["c1"], img)))      # 16x16x64
+    h = _apply_fire(params["fire1"], h)
+    h = _maxpool(_apply_fire(params["fire2"], h))                  # 8x8x128
+    h = _apply_fire(params["fire3"], h)                            # 8x8x256
+    h = _apply_conv(params["head"], h)                             # 8x8xC
+    logits = jnp.mean(h, axis=(1, 2))
+    return logits + _apply_linear(params["side"], side)
+
+
+# --- LSTM (Dataset-2) --------------------------------------------------------
+
+def _lstm_layer(key, din, dh):
+    k1, k2 = jax.random.split(key)
+    return {"wx": dense_init(k1, (din, 4 * dh), scale=(1.0 / din) ** 0.5),
+            "wh": dense_init(k2, (dh, 4 * dh), scale=(1.0 / dh) ** 0.5),
+            "b": jnp.zeros((4 * dh,))}
+
+
+def _apply_lstm(p, xs):
+    """xs: (B, L, din) -> (B, L, dh)."""
+    B = xs.shape[0]
+    dh = p["wh"].shape[0]
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, dh)), jnp.zeros((B, dh)))
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(xs, 1, 0))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def init_lstm(key):
+    ks = jax.random.split(key, 5)
+    return {"embed": dense_init(ks[0], (NUM_CLASSES, 64)),
+            "l1": _lstm_layer(ks[1], 64, 128),
+            "l2": _lstm_layer(ks[2], 128, 128),
+            "l3": _lstm_layer(ks[3], 128, 128),
+            "head": _linear(ks[4], 128, NUM_CLASSES)}
+
+
+def lstm_forward(params, x):
+    """x: (B, L) int32 content ids."""
+    h = params["embed"][x.astype(jnp.int32)]
+    h = _apply_lstm(params["l1"], h)
+    h = _apply_lstm(params["l2"], h)
+    h = _apply_lstm(params["l3"], h)
+    return _apply_linear(params["head"], h[:, -1])
+
+
+REGISTRY = {
+    "fcn": (init_fcn, fcn_forward),
+    "cnn": (init_cnn, cnn_forward),
+    "squeezenet": (init_squeezenet, squeezenet_forward),
+    "lstm": (init_lstm, lstm_forward),
+}
+
+
+def init_small(key, name: str):
+    return REGISTRY[name][0](key)
+
+
+def small_forward(params, x, name: str):
+    return REGISTRY[name][1](params, x)
+
+
+def small_loss(params, batch, name: str):
+    logits = small_forward(params, batch["x"], name)
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,437 @@
+"""State-space / recurrent blocks: Mamba2 (chunked SSD) and xLSTM (mLSTM/sLSTM).
+
+Mamba2 uses the chunked SSD formulation: intra-chunk attention-like matmuls
+(MXU friendly, (B,H,Q,Q) with small Q) + an inter-chunk state scan, which is
+the TPU adaptation of the paper-family GPU kernels. Decode carries
+(conv_state, ssm_state) and is O(1) in context length — this is why the
+ssm/hybrid architectures run the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+HEAD_P = 64  # mamba2 head dim
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = max(1, d_inner // HEAD_P)
+    d_inner = n_heads * HEAD_P
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, H, conv_dim = mamba_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + 2 * s.n_groups * s.d_state + H),
+                              dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,L,C); w: (K,C) depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_inner, H, _ = mamba_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xi, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xi, Bm, Cm, dt
+
+
+def mamba_fwd(params, x, cfg: ModelConfig):
+    """Chunked SSD. x: (B, L, d) -> (B, L, d). L must be divisible by chunk."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = mamba_dims(cfg)
+    N, G, Q = s.d_state, s.n_groups, s.chunk_size
+    B_, L, _ = x.shape
+    dt_ = x.dtype
+    proj = x @ params["in_proj"].astype(dt_)
+    z, xi, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"].astype(dt_),
+                                        params["conv_b"].astype(dt_)))
+    xi, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+    xh = xi.reshape(B_, L, H, HEAD_P)
+    Bm = Bm.reshape(B_, L, G, N).mean(2)            # (B,L,N)  (G=1 typical)
+    Cm = Cm.reshape(B_, L, G, N).mean(2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))        # (B,L,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                  # (H,)
+    la = dt * A                                                        # log decay
+
+    nc = L // Q
+    assert nc * Q == L, f"seq {L} not divisible by chunk {Q}"
+    xc = xh.reshape(B_, nc, Q, H, HEAD_P)
+    Bc = Bm.reshape(B_, nc, Q, N)
+    Cc = Cm.reshape(B_, nc, Q, N)
+    lac = la.reshape(B_, nc, Q, H)
+    dtc = dt.reshape(B_, nc, Q, H)
+
+    seg = jnp.cumsum(lac, axis=2)                                      # (B,nc,Q,H)
+
+    def chunk_step(h0, inp):
+        xq, Bq, Cq, segq, laq, dtq = inp
+        # h0: (B,H,P,N). All within a single chunk.
+        # intra-chunk: scores[t,s] = (C_t.B_s) exp(seg_t - seg_s) dt_s, s<=t
+        cb = jnp.einsum("btn,bsn->bts", Cq, Bq)                        # (B,Q,Q)
+        dec = jnp.exp(segq[:, :, None, :] - segq[:, None, :, :])       # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        w = jnp.where(tri, cb[..., None] * dec * dtq[:, None, :, :], 0.0)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w.astype(xq.dtype), xq)
+        # contribution of incoming state
+        y_state = jnp.einsum("btn,bhpn,bth->bthp", Cq, h0.astype(xq.dtype),
+                             jnp.exp(segq).astype(xq.dtype))
+        # state update: h' = exp(seg_Q) h0 + sum_s exp(seg_Q - seg_s) dt_s B_s x_s
+        decay_out = jnp.exp(segq[:, -1:, :] - segq)                    # (B,Q,H)
+        h_in = jnp.einsum("bsh,bsn,bshp->bhpn",
+                          (decay_out * dtq).astype(xq.dtype), Bq, xq)
+        h1 = (jnp.exp(segq[:, -1, :])[:, :, None, None].astype(jnp.float32)
+              * h0 + h_in.astype(jnp.float32))
+        return h1, y_intra + y_state
+
+    h0 = jnp.zeros((B_, H, HEAD_P, N), jnp.float32)
+    inputs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(Bc, 1, 0),
+              jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(seg, 1, 0),
+              jnp.moveaxis(lac, 1, 0), jnp.moveaxis(dtc, 1, 0))
+    _, ys = jax.lax.scan(chunk_step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, L, H, HEAD_P)
+    y = y + params["D"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(B_, L, d_inner)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(dt_)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, H, conv_dim = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, H, HEAD_P, s.d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(params, x, cache, cfg: ModelConfig):
+    """x: (B, 1, d). O(1) decode. Returns (y, new_cache)."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = mamba_dims(cfg)
+    N, G = s.d_state, s.n_groups
+    B_, _, d = x.shape
+    dt_ = x.dtype
+    proj = x @ params["in_proj"].astype(dt_)
+    z, xi, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)                  # (B,1,C)
+    window = jnp.concatenate([cache["conv"].astype(dt_), conv_in], axis=1)
+    w = params["conv_w"].astype(dt_)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(dt_)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    xi, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+    xh = xi.reshape(B_, H, HEAD_P)
+    Bv = Bm.reshape(B_, G, N).mean(1)
+    Cv = Cm.reshape(B_, G, N).mean(1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))       # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                               # (B,H)
+    h = (a[:, :, None, None] * cache["h"] +
+         jnp.einsum("bh,bn,bhp->bhpn", dt, Bv.astype(jnp.float32),
+                    xh.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", Cv.astype(jnp.float32), h).astype(dt_)
+    y = y + params["D"].astype(dt_)[None, :, None] * xh
+    y = y.reshape(B_, 1, d_inner)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    y = y @ params["out_proj"].astype(dt_)
+    new_cache = {"conv": window[:, 1:, :].astype(cache["conv"].dtype), "h": h}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+def xlstm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = int(cfg.d_model * s.mlstm_proj_factor)
+    H = cfg.n_heads
+    P = d_inner // H
+    return d_inner, H, P
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, P = xlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * d_inner), dtype=dtype),
+        "conv_w": dense_init(ks[1], (4, d_inner), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": dense_init(ks[2], (d_inner, d_inner), dtype=dtype),
+        "wk": dense_init(ks[3], (d_inner, d_inner), dtype=dtype),
+        "wv": dense_init(ks[4], (d_inner, d_inner), dtype=dtype),
+        "w_gates": dense_init(ks[5], (d_inner, 2 * H), dtype=dtype),
+        "gate_bias": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]
+                                     ).astype(dtype),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "down_proj": dense_init(ks[6], (d_inner, d), dtype=dtype),
+    }
+
+
+def mlstm_fwd(params, x, cfg: ModelConfig):
+    """mLSTM forward. Dispatches to the chunkwise form for long sequences
+    (linear memory in S); quadratic parallel form otherwise. x: (B,L,d)."""
+    Q = min(cfg.ssm.chunk_size, 256)
+    if x.shape[1] >= 2 * Q and x.shape[1] % Q == 0:
+        return mlstm_fwd_chunked(params, x, cfg)
+    return _mlstm_fwd_quadratic(params, x, cfg)
+
+
+def _mlstm_fwd_quadratic(params, x, cfg: ModelConfig):
+    """Parallel (quadratic) mLSTM forward. x: (B,L,d)."""
+    d_inner, H, P = xlstm_dims(cfg)
+    B_, L, _ = x.shape
+    dt_ = x.dtype
+    up = x @ params["up_proj"].astype(dt_)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xi, params["conv_w"].astype(dt_),
+                                  params["conv_b"].astype(dt_)))
+    q = (xc @ params["wq"].astype(dt_)).reshape(B_, L, H, P)
+    k = (xc @ params["wk"].astype(dt_)).reshape(B_, L, H, P) / (P ** 0.5)
+    v = (xi @ params["wv"].astype(dt_)).reshape(B_, L, H, P)
+    gates = (xi @ params["w_gates"].astype(dt_)).astype(jnp.float32) \
+        + params["gate_bias"].astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)                              # (B,L,H)
+    logf = jax.nn.log_sigmoid(fg)
+    cumf = jnp.cumsum(logf, axis=1)
+    # D[t,s] = cumf_t - cumf_s + i_s  (s <= t)
+    Dm = cumf[:, :, None, :] - cumf[:, None, :, :] + ig[:, None, :, :]  # (B,T,S,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+    Dm = jnp.where(tri, Dm, -jnp.inf)
+    m = jnp.max(Dm, axis=2, keepdims=True)                             # (B,T,1,H)
+    w = jnp.exp(Dm - m)                                                # (B,T,S,H)
+    scores = jnp.einsum("bthp,bshp->btsh", q, k).astype(jnp.float32) * w
+    norm = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2, keepdims=True)),
+                       jnp.exp(-m))                                    # (B,T,1,H)
+    scores = (scores / norm).astype(dt_)
+    h = jnp.einsum("btsh,bshp->bthp", scores, v).reshape(B_, L, d_inner)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["down_proj"].astype(dt_)
+
+
+def mlstm_fwd_chunked(params, x, cfg: ModelConfig):
+    """Chunkwise-stabilized mLSTM (§Perf: the quadratic parallel form
+    materializes (B,H,S,S) — 4.3e9 elements at 32k — while this form carries
+    the matrix memory (C, n, m) across chunks of length Q and only builds
+    (B,H,Q,Q) blocks, making prefill memory linear in S).
+
+    Math: with per-chunk local cumsum F_tau = sum_{r<=tau} logf_r and
+    D[tau,s] = F_tau - F_s + i_s (s<=tau), position tau combines
+      inter: exp(F_tau + m_state - M) * (C q) with running max
+      M = max(F_tau + m_state, max_s D[tau,s]); intra as usual; and the
+    chunk-end state update mirrors the decode recurrence exactly.
+    """
+    d_inner, H, P = xlstm_dims(cfg)
+    Q = min(cfg.ssm.chunk_size, 256)
+    B_, L, _ = x.shape
+    dt_ = x.dtype
+    up = x @ params["up_proj"].astype(dt_)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xi, params["conv_w"].astype(dt_),
+                                  params["conv_b"].astype(dt_)))
+    q = (xc @ params["wq"].astype(dt_)).reshape(B_, L, H, P)
+    k = (xc @ params["wk"].astype(dt_)).reshape(B_, L, H, P) / (P ** 0.5)
+    v = (xi @ params["wv"].astype(dt_)).reshape(B_, L, H, P)
+    gates = (xi @ params["w_gates"].astype(dt_)).astype(jnp.float32) \
+        + params["gate_bias"].astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)                              # (B,L,H)
+    logf = jax.nn.log_sigmoid(fg)
+
+    nc = L // Q
+    assert nc * Q == L, (L, Q)
+    qc = jnp.moveaxis(q.reshape(B_, nc, Q, H, P), 1, 0).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(B_, nc, Q, H, P), 1, 0).astype(jnp.float32)
+    vc = jnp.moveaxis(v.reshape(B_, nc, Q, H, P), 1, 0).astype(jnp.float32)
+    ic = jnp.moveaxis(ig.reshape(B_, nc, Q, H), 1, 0)
+    fc = jnp.moveaxis(logf.reshape(B_, nc, Q, H), 1, 0)
+
+    def chunk(carry, inp):
+        C, n, m = carry                       # (B,H,P,P), (B,H,P), (B,H)
+        qq, kk, vv, ii, ff = inp
+        F = jnp.cumsum(ff, axis=1)            # (B,Q,H) local cumsum
+        # D[tau,s] = F_tau - F_s + i_s, s <= tau
+        D = F[:, :, None, :] - F[:, None, :, :] + ii[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        D = jnp.where(tri, D, -jnp.inf)
+        m_intra = jnp.max(D, axis=2)          # (B,Q,H)
+        m_inter = F + m[:, None, :]           # (B,Q,H)
+        M = jnp.maximum(m_intra, m_inter)
+        w = jnp.exp(D - M[:, :, None, :])     # (B,Q,S,H)
+        scores = jnp.einsum("bthp,bshp->btsh", qq, kk) * w
+        inter_scale = jnp.exp(m_inter - M)    # (B,Q,H)
+        num_inter = jnp.einsum("bhpq,bthq->bthp", C, qq) \
+            * inter_scale[..., None]
+        num = jnp.einsum("btsh,bshp->bthp", scores, vv) + num_inter
+        den = (jnp.sum(scores, axis=2)
+               + jnp.einsum("bhp,bthp->bth", n, qq) * inter_scale)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-M))
+        h = num / den[..., None]              # (B,Q,H,P)
+        # state update (mirror of the decode recurrence over the chunk)
+        FQ = F[:, -1, :]                      # (B,H)
+        m_endc = jnp.max(FQ[:, None, :] - F + ii, axis=1)   # (B,H)
+        m_new = jnp.maximum(FQ + m, m_endc)
+        decay = jnp.exp(FQ[:, None, :] - F + ii - m_new[:, None, :])
+        C_new = jnp.exp(FQ + m - m_new)[:, :, None, None] * C + \
+            jnp.einsum("bsh,bshp,bshq->bhpq", decay, vv, kk)
+        n_new = jnp.exp(FQ + m - m_new)[:, :, None] * n + \
+            jnp.einsum("bsh,bshp->bhp", decay, kk)
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B_, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B_, H, P), jnp.float32)
+    m0 = jnp.full((B_, H), -1e9, jnp.float32)
+    _, hs = jax.lax.scan(chunk, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B_, L, d_inner).astype(dt_)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["down_proj"].astype(dt_)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    d_inner, H, P = xlstm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, 3, d_inner), jnp.float32),
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.full((batch, H), -1e9, jnp.float32),
+    }
+
+
+def mlstm_decode_step(params, x, cache, cfg: ModelConfig):
+    d_inner, H, P = xlstm_dims(cfg)
+    B_, _, d = x.shape
+    dt_ = x.dtype
+    up = x @ params["up_proj"].astype(dt_)
+    xi, z = jnp.split(up, 2, axis=-1)                                  # (B,1,di)
+    window = jnp.concatenate([cache["conv"], xi.astype(jnp.float32)], axis=1)
+    xc = jnp.einsum("bkc,kc->bc", window.astype(dt_),
+                    params["conv_w"].astype(dt_)) + params["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)[:, None, :]
+    q = (xc @ params["wq"].astype(dt_)).reshape(B_, H, P).astype(jnp.float32)
+    k = ((xc @ params["wk"].astype(dt_)).reshape(B_, H, P) / (P ** 0.5)
+         ).astype(jnp.float32)
+    v = (xi @ params["wv"].astype(dt_)).reshape(B_, H, P).astype(jnp.float32)
+    gates = (xi @ params["w_gates"].astype(dt_)).astype(jnp.float32)[:, 0] \
+        + params["gate_bias"].astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)                              # (B,H)
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + cache["m"], ig)
+    fs = jnp.exp(logf + cache["m"] - m_new)[:, :, None]
+    is_ = jnp.exp(ig - m_new)[:, :, None]
+    C = fs[..., None] * cache["C"] + is_[..., None] * jnp.einsum(
+        "bhp,bhq->bhpq", v, k)
+    n = fs * cache["n"] + is_ * k
+    num = jnp.einsum("bhpq,bhq->bhp", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q)),
+                      jnp.exp(-m_new))[:, :, None]
+    h = (num / den).reshape(B_, 1, d_inner).astype(dt_)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    y = h @ params["down_proj"].astype(dt_)
+    cache = {"conv": window[:, 1:, :], "C": C, "n": n, "m": m_new}
+    return y, cache
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype=dtype),          # i,f,z,o
+        "r": dense_init(ks[1], (H, P, 4 * P), dtype=dtype),          # block-diag rec
+        "bias": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                                 jnp.zeros((2 * d,))]).astype(dtype),
+        "norm": init_rmsnorm(d, dtype),
+        "out_proj": dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def _slstm_cell(params, carry, xt, H, P):
+    """One sLSTM step. carry: (c,n,m,h) each (B,H,P) / m (B,H,P)."""
+    c, n, m, h = carry
+    pre = xt + jnp.einsum("bhp,hpq->bhq", h, params["r"].astype(xt.dtype)
+                          ).reshape(xt.shape)                          # (B,4d)
+    B_ = xt.shape[0]
+    pre = pre.reshape(B_, 4, H, P)
+    i_raw, f_raw, z_raw, o_raw = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    i_raw = i_raw.astype(jnp.float32)
+    f_raw = f_raw.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z_raw.astype(jnp.float32))
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_raw.astype(jnp.float32)) * c_new / \
+        jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_fwd(params, x, cfg: ModelConfig, carry=None):
+    """Recurrent sLSTM over the sequence. x: (B,L,d)."""
+    H = cfg.n_heads
+    B_, L, d = x.shape
+    P = d // H
+    dt_ = x.dtype
+    pre = x @ params["w_in"].astype(dt_) + params["bias"].astype(dt_)  # (B,L,4d)
+    if carry is None:
+        zero = jnp.zeros((B_, H, P), jnp.float32)
+        carry = (zero, zero, jnp.full((B_, H, P), -1e9, jnp.float32), zero)
+
+    def step(carry, xt):
+        return _slstm_cell(params, carry, xt, H, P)
+
+    carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B_, L, d).astype(dt_)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps)
+    return h @ params["out_proj"].astype(dt_), carry
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    zero = jnp.zeros((batch, H, P), jnp.float32)
+    return {"c": zero, "n": zero, "m": jnp.full((batch, H, P), -1e9, jnp.float32),
+            "h": zero}
+
+
+def slstm_decode_step(params, x, cache, cfg: ModelConfig):
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    y, carry = slstm_fwd(params, x, cfg, carry=carry)
+    c, n, m, h = carry
+    return y, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,695 @@
+"""Model assembly: builds every assigned architecture from a ModelConfig.
+
+Families:
+  dense decoders        (h2o-danube-3, nemotron-4, qwen1.5, deepseek-coder)
+  MoE decoders          (deepseek-v3 w/ MLA+MTP, arctic w/ dense residual)
+  hybrid SSM            (zamba2: mamba2 backbone + shared attention block)
+  xLSTM                 (mLSTM/sLSTM groups)
+  encoder-decoder audio (whisper-medium; conv/mel frontend stubbed)
+  VLM decoder           (llama-3.2-vision: interleaved cross-attn layers)
+
+All parameter stacks are scanned (lax.scan over stacked layer params) so the
+largest configs lower/compile quickly. Public API:
+
+  init_model(key, cfg)                         -> params
+  forward(params, batch, cfg)                  -> (logits, aux_loss)
+  loss_fn(params, batch, cfg)                  -> (loss, metrics)
+  init_cache(cfg, batch, length)               -> cache
+  decode_step(params, cache, tokens, pos, cfg) -> (logits, new_cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_lib
+from repro.models.attention import (cross_attn_fwd, gqa_fwd, init_cross_attn,
+                                    init_gqa, init_gqa_cache, init_mla,
+                                    init_mla_cache, mla_fwd)
+from repro.models.layers import (dense_init, embed, init_embedding, init_mlp,
+                                 init_rmsnorm, mlp_fwd, rmsnorm, unembed)
+from repro.models.moe import init_moe, moe_fwd
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def stacked_init(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Generic transformer block (self-attn [+moe|mlp]); attention kind from cfg
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, *, use_moe: bool, d_ff: int = 0,
+               causal: bool = True, dtype=None):
+    dtype = dtype or _pdtype(cfg)
+    k1, k2 = jax.random.split(key)
+    if cfg.attention == "mla":
+        attn = init_mla(k1, cfg, dtype=dtype)
+    else:
+        attn = init_gqa(k1, cfg, dtype=dtype)
+    p = {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn,
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if use_moe:
+        p["moe"] = init_moe(k2, cfg, dtype=dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg, d_ff=d_ff or cfg.d_ff, dtype=dtype)
+    return p
+
+
+def block_fwd(p, x, cfg: ModelConfig, positions, *, use_moe: bool,
+              cache=None, cache_pos=None, causal: bool = True,
+              rope: bool = True):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        h, new_cache = mla_fwd(p["attn"], h, cfg, positions,
+                               cache=cache, cache_pos=cache_pos)
+    else:
+        h, new_cache = gqa_fwd(p["attn"], h, cfg, positions, cache=cache,
+                               cache_pos=cache_pos, causal=causal, rope=rope)
+    x = x + h
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        h, aux = moe_fwd(p["moe"], h, cfg)
+    else:
+        h, aux = mlp_fwd(p["mlp"], h, cfg.mlp), jnp.float32(0.0)
+    return x + h, new_cache, aux
+
+
+import os
+
+
+def _maybe_remat(fn, cfg):
+    """Per-layer activation checkpointing (§Perf A1/C1): recompute the layer
+    in backward instead of storing its internals. REPRO_REMAT_POLICY=dots
+    saves matmul outputs (no recomputed TP collectives, more memory)."""
+    if not cfg.remat:
+        return fn
+    if os.environ.get("REPRO_REMAT_POLICY", "") == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def _scan_blocks(stack, x, cfg, positions, *, use_moe, caches=None,
+                 cache_pos=None, causal=True, rope=True):
+    """Scan a stacked block over the layer axis; threads caches if given."""
+    if caches is None:
+        def body(carry, layer_p):
+            h, aux = carry
+            h, _, a = block_fwd(layer_p, h, cfg, positions, use_moe=use_moe,
+                                causal=causal, rope=rope)
+            return (h, aux + a), None
+        (x, aux), _ = jax.lax.scan(_maybe_remat(body, cfg),
+                                   (x, jnp.float32(0.0)), stack)
+        return x, aux, None
+
+    def body(h, inp):
+        layer_p, layer_c = inp
+        h, new_c, _ = block_fwd(layer_p, h, cfg, positions, use_moe=use_moe,
+                                cache=layer_c, cache_pos=cache_pos,
+                                causal=causal, rope=rope)
+        return h, new_c
+    x, new_caches = jax.lax.scan(body, x, (stack, caches))
+    return x, jnp.float32(0.0), new_caches
+
+
+def _block_cache(cfg: ModelConfig, batch: int, length: int):
+    if cfg.attention == "mla":
+        return init_mla_cache(cfg, batch, length)
+    return init_gqa_cache(cfg, batch, length)
+
+
+def _stack_tree(tree, lead: tuple):
+    """Stack a cache pytree along new leading axes, PRESERVING initial values
+    (e.g. the -1e9 running-max stabilizers in m/sLSTM caches)."""
+    return jax.tree.map(
+        lambda c: jnp.broadcast_to(c, tuple(lead) + c.shape).copy(), tree)
+
+
+def _stacked_cache(cfg, n, batch, length):
+    return _stack_tree(_block_cache(cfg, batch, length), (n,))
+
+
+# ===========================================================================
+# Family: dense / MoE decoders (incl. deepseek-v3, arctic)
+# ===========================================================================
+
+def _init_decoder(key, cfg: ModelConfig):
+    pd = _pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    moe_cfg = cfg.moe
+    n_dense = moe_cfg.first_dense_layers if moe_cfg else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if moe_cfg else 0
+    params: Dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, pd),
+        "final_norm": init_rmsnorm(cfg.d_model, pd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                       dtype=pd)
+    d_ff_dense = (moe_cfg.d_ff_dense or cfg.d_ff) if moe_cfg else cfg.d_ff
+    if n_dense:
+        params["dense_layers"] = stacked_init(
+            lambda k: init_block(k, cfg, use_moe=False, d_ff=d_ff_dense),
+            ks[2], n_dense)
+    if n_moe:
+        params["moe_layers"] = stacked_init(
+            lambda k: init_block(k, cfg, use_moe=True), ks[3], n_moe)
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": dense_init(ks[4], (2 * cfg.d_model, cfg.d_model), dtype=pd),
+            "ln_h": init_rmsnorm(cfg.d_model, pd),
+            "ln_e": init_rmsnorm(cfg.d_model, pd),
+            "block": init_block(ks[5], cfg, use_moe=False, d_ff=d_ff_dense),
+        }
+    return params
+
+
+def _decoder_trunk(params, x, cfg, positions, caches=None, cache_pos=None):
+    moe_cfg = cfg.moe
+    n_dense = moe_cfg.first_dense_layers if moe_cfg else cfg.n_layers
+    aux = jnp.float32(0.0)
+    new_caches = {}
+    if n_dense:
+        x, a, nc = _scan_blocks(params["dense_layers"], x, cfg, positions,
+                                use_moe=False,
+                                caches=caches.get("dense") if caches else None,
+                                cache_pos=cache_pos)
+        aux += a
+        new_caches["dense"] = nc
+    if moe_cfg and cfg.n_layers - n_dense:
+        x, a, nc = _scan_blocks(params["moe_layers"], x, cfg, positions,
+                                use_moe=True,
+                                caches=caches.get("moe") if caches else None,
+                                cache_pos=cache_pos)
+        aux += a
+        new_caches["moe"] = nc
+    return x, aux, new_caches
+
+
+def _logits(params, x, cfg):
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x)
+    return x @ params["lm_head"].astype(x.dtype)
+
+
+def _decoder_forward(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, _cdtype(cfg))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, aux, _ = _decoder_trunk(params, x, cfg, positions)
+    logits = _logits(params, x, cfg)
+    if cfg.mtp_depth and "labels" in batch:
+        aux = aux + _mtp_loss(params, x, batch, cfg, positions)
+    return logits, aux
+
+
+def _mtp_loss(params, h, batch, cfg, positions, weight: float = 0.1):
+    """DeepSeek-V3 multi-token prediction: predict token t+2 from
+    (h_t, emb(token_{t+1})) through one extra block."""
+    p = params["mtp"]
+    tokens, labels = batch["tokens"], batch["labels"]
+    nxt = jnp.roll(tokens, -1, axis=1)
+    e = embed(params["embed"], nxt, h.dtype)
+    z = jnp.concatenate([rmsnorm(p["ln_h"], h, cfg.norm_eps),
+                         rmsnorm(p["ln_e"], e, cfg.norm_eps)], axis=-1)
+    z = z @ p["proj"].astype(h.dtype)
+    z, _, _ = block_fwd(p["block"], z, cfg, positions, use_moe=False)
+    logits = _logits(params, z, cfg)
+    tgt = jnp.roll(labels, -1, axis=1)
+    S = tokens.shape[1]
+    mask = (jnp.arange(S) < S - 2)[None, :]
+    return weight * _ce(logits, tgt, mask)
+
+
+# ===========================================================================
+# Family: hybrid (zamba2) — mamba2 backbone + shared attention block
+# ===========================================================================
+
+def _init_zamba(key, cfg: ModelConfig):
+    pd = _pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    every = cfg.hybrid.shared_attn_every
+    n_groups = cfg.n_layers // every
+    params = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, pd),
+        "final_norm": init_rmsnorm(cfg.d_model, pd),
+        # (n_groups, every, ...) stacked mamba layers
+        "mamba_layers": jax.vmap(lambda kk: stacked_init(
+            lambda k: {"ln": init_rmsnorm(cfg.d_model, pd),
+                       "m": ssm_lib.init_mamba(k, cfg, pd)}, kk, every))(
+            jax.random.split(ks[1], n_groups)),
+        "shared_block": init_block(
+            ks[2], cfg, use_moe=False, d_ff=cfg.hybrid.shared_block_d_ff),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                       dtype=pd)
+    return params
+
+
+def _zamba_trunk(params, x, cfg, positions, caches=None, cache_pos=None):
+    every = cfg.hybrid.shared_attn_every
+    decode = caches is not None
+
+    def mamba_layer(h, lp, lc):
+        hn = rmsnorm(lp["ln"], h, cfg.norm_eps)
+        if decode:
+            y, nc = ssm_lib.mamba_decode_step(lp["m"], hn, lc, cfg)
+        else:
+            y, nc = ssm_lib.mamba_fwd(lp["m"], hn, cfg), None
+        return h + y, nc
+
+    def group(h, inp):
+        group_p, group_c, attn_c = inp
+
+        def inner(hh, li):
+            lp, lc = li
+            return mamba_layer(hh, lp, lc)
+        h, new_mc = jax.lax.scan(inner, h, (group_p, group_c))
+        h, new_ac, _ = block_fwd(params["shared_block"], h, cfg, positions,
+                                 use_moe=False, cache=attn_c,
+                                 cache_pos=cache_pos)
+        return h, (new_mc, new_ac)
+
+    if not decode:
+        def group_nc(h, gp):
+            def inner(hh, lp):
+                hh, _ = mamba_layer(hh, lp, None)
+                return hh, None
+            h, _ = jax.lax.scan(_maybe_remat(inner, cfg), h, gp)
+            h, _, _ = block_fwd(params["shared_block"], h, cfg, positions,
+                                use_moe=False)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(group_nc, cfg), x,
+                            params["mamba_layers"])
+        return x, jnp.float32(0.0), None
+    x, (new_mc, new_ac) = jax.lax.scan(
+        group, x, (params["mamba_layers"], caches["mamba"], caches["attn"]))
+    return x, jnp.float32(0.0), {"mamba": new_mc, "attn": new_ac}
+
+
+# ===========================================================================
+# Family: xLSTM
+# ===========================================================================
+
+def _init_xlstm(key, cfg: ModelConfig):
+    pd = _pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    every = cfg.ssm.slstm_every or cfg.n_layers + 1
+    n_groups = max(1, cfg.n_layers // every) if cfg.ssm.slstm_every else 1
+    n_m = (every - 1) if cfg.ssm.slstm_every else cfg.n_layers
+    params = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, pd),
+        "final_norm": init_rmsnorm(cfg.d_model, pd),
+        "mlstm_layers": jax.vmap(lambda kk: stacked_init(
+            lambda k: {"ln": init_rmsnorm(cfg.d_model, pd),
+                       "m": ssm_lib.init_mlstm(k, cfg, pd)}, kk, n_m))(
+            jax.random.split(ks[1], n_groups)),
+    }
+    if cfg.ssm.slstm_every:
+        params["slstm_layers"] = stacked_init(
+            lambda k: {"ln": init_rmsnorm(cfg.d_model, pd),
+                       "s": ssm_lib.init_slstm(k, cfg, pd)}, ks[2], n_groups)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                       dtype=pd)
+    return params
+
+
+def _xlstm_trunk(params, x, cfg, positions, caches=None, cache_pos=None):
+    decode = caches is not None
+    has_s = "slstm_layers" in params
+
+    def m_layer(h, lp, lc):
+        hn = rmsnorm(lp["ln"], h, cfg.norm_eps)
+        if decode:
+            y, nc = ssm_lib.mlstm_decode_step(lp["m"], hn, lc, cfg)
+        else:
+            y, nc = ssm_lib.mlstm_fwd(lp["m"], hn, cfg), None
+        return h + y, nc
+
+    def s_layer(h, lp, lc):
+        hn = rmsnorm(lp["ln"], h, cfg.norm_eps)
+        if decode:
+            y, nc = ssm_lib.slstm_decode_step(lp["s"], hn, lc, cfg)
+        else:
+            y, _ = ssm_lib.slstm_fwd(lp["s"], hn, cfg)
+            nc = None
+        return h + y, nc
+
+    def group(h, inp):
+        gp_m, gc_m, gp_s, gc_s = inp
+
+        def inner(hh, li):
+            lp, lc = li
+            return m_layer(hh, lp, lc)
+        if decode:
+            h, new_mc = jax.lax.scan(inner, h, (gp_m, gc_m))
+        else:
+            def inner_nc(hh, lp):
+                hh, _ = m_layer(hh, lp, None)
+                return hh, None
+            h, _ = jax.lax.scan(inner_nc, h, gp_m)
+            new_mc = None
+        new_sc = None
+        if has_s:
+            h, new_sc = s_layer(h, gp_s, gc_s)
+        return h, (new_mc, new_sc)
+
+    n_groups = params["mlstm_layers"]["ln"]["scale"].shape[0]
+    gc_m = caches["mlstm"] if decode else None
+    gc_s = caches.get("slstm") if decode and has_s else None
+    sp = params.get("slstm_layers")
+    if not decode:
+        def group_nc(h, inp):
+            gp_m, gp_s = inp
+            def inner_nc(hh, lp):
+                hh, _ = m_layer(hh, lp, None)
+                return hh, None
+            h, _ = jax.lax.scan(_maybe_remat(inner_nc, cfg), h, gp_m)
+            if has_s:
+                h, _ = s_layer(h, gp_s, None)
+            return h, None
+        xs = (params["mlstm_layers"], sp if has_s else jnp.zeros((n_groups,)))
+        x, _ = jax.lax.scan(_maybe_remat(group_nc, cfg), x, xs)
+        return x, jnp.float32(0.0), None
+    xs = (params["mlstm_layers"], gc_m,
+          sp if has_s else jnp.zeros((n_groups,)),
+          gc_s if has_s else jnp.zeros((n_groups,)))
+    x, (new_mc, new_sc) = jax.lax.scan(group, x, xs)
+    nc = {"mlstm": new_mc}
+    if has_s:
+        nc["slstm"] = new_sc
+    return x, jnp.float32(0.0), nc
+
+
+# ===========================================================================
+# Family: VLM (llama-3.2-vision): interleaved gated cross-attn layers
+# ===========================================================================
+
+def _init_vlm(key, cfg: ModelConfig):
+    pd = _pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    every = cfg.vision.cross_attn_every
+    n_groups = cfg.n_layers // every
+    n_self = every - 1
+    params = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, pd),
+        "final_norm": init_rmsnorm(cfg.d_model, pd),
+        "vision_proj": dense_init(ks[1], (cfg.vision.d_vision, cfg.d_model),
+                                  dtype=pd),
+        "self_layers": jax.vmap(lambda kk: stacked_init(
+            lambda k: init_block(k, cfg, use_moe=False), kk, n_self))(
+            jax.random.split(ks[2], n_groups)),
+        "cross_layers": stacked_init(
+            lambda k: _init_cross_block(k, cfg, pd), ks[3], n_groups),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[4], (cfg.d_model, cfg.vocab_size),
+                                       dtype=pd)
+    return params
+
+
+def _init_cross_block(key, cfg, pd):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, pd),
+        "xattn": init_cross_attn(k1, cfg, cfg.d_model, pd),
+        "gate_attn": jnp.zeros((), pd),
+        "ln2": init_rmsnorm(cfg.d_model, pd),
+        "mlp": init_mlp(k2, cfg, dtype=pd),
+        "gate_mlp": jnp.zeros((), pd),
+    }
+
+
+def _cross_block_fwd(p, x, memory, cfg):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    h = cross_attn_fwd(p["xattn"], h, memory, cfg)
+    x = x + jnp.tanh(p["gate_attn"].astype(h.dtype)) * h
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    h = mlp_fwd(p["mlp"], h, cfg.mlp)
+    return x + jnp.tanh(p["gate_mlp"].astype(h.dtype)) * h
+
+
+def _vlm_trunk(params, x, cfg, positions, memory, caches=None, cache_pos=None):
+    decode = caches is not None
+
+    def group(h, inp):
+        gp_self, gc_self, gp_cross = inp
+        if decode:
+            def inner(hh, li):
+                lp, lc = li
+                hh, nc, _ = block_fwd(lp, hh, cfg, positions, use_moe=False,
+                                      cache=lc, cache_pos=cache_pos)
+                return hh, nc
+            h, new_sc = jax.lax.scan(inner, h, (gp_self, gc_self))
+        else:
+            def inner_nc(hh, lp):
+                hh, _, _ = block_fwd(lp, hh, cfg, positions, use_moe=False)
+                return hh, None
+            h, _ = jax.lax.scan(inner_nc, h, gp_self)
+            new_sc = None
+        h = _cross_block_fwd(gp_cross, h, memory, cfg)
+        return h, new_sc
+
+    if decode:
+        x, new_sc = jax.lax.scan(
+            group, x, (params["self_layers"], caches["self"],
+                       params["cross_layers"]))
+        return x, jnp.float32(0.0), {"self": new_sc}
+    n_groups = params["cross_layers"]["gate_attn"].shape[0]
+    x, _ = jax.lax.scan(
+        _maybe_remat(group, cfg), x,
+        (params["self_layers"], jnp.zeros((n_groups,)),
+         params["cross_layers"]))
+    return x, jnp.float32(0.0), None
+
+
+# ===========================================================================
+# Family: encoder-decoder audio (whisper)
+# ===========================================================================
+
+def _init_whisper(key, cfg: ModelConfig):
+    pd = _pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, pd),
+        "final_norm": init_rmsnorm(cfg.d_model, pd),
+        "enc_layers": stacked_init(
+            lambda k: init_block(k, cfg, use_moe=False), ks[1],
+            cfg.encoder.n_layers),
+        "enc_norm": init_rmsnorm(cfg.d_model, pd),
+        "dec_layers": stacked_init(
+            lambda k: _init_decdec_block(k, cfg, pd), ks[2], cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                       dtype=pd)
+    return params
+
+
+def _init_decdec_block(key, cfg, pd):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, pd),
+        "attn": init_gqa(k1, cfg, pd),
+        "ln_x": init_rmsnorm(cfg.d_model, pd),
+        "xattn": init_cross_attn(k2, cfg, cfg.d_model, pd),
+        "ln2": init_rmsnorm(cfg.d_model, pd),
+        "mlp": init_mlp(k3, cfg, dtype=pd),
+    }
+
+
+def _decdec_block_fwd(p, x, memory, cfg, positions, cache=None, cache_pos=None):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    h, nc = gqa_fwd(p["attn"], h, cfg, positions, cache=cache,
+                    cache_pos=cache_pos, causal=True)
+    x = x + h
+    h = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+    x = x + cross_attn_fwd(p["xattn"], h, memory, cfg)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp_fwd(p["mlp"], h, cfg.mlp), nc
+
+
+def _sinusoid(n: int, d: int, dtype):
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10_000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def whisper_encode(params, frames, cfg: ModelConfig):
+    """frames: (B, F, d_model) precomputed conv/mel embeddings (stub)."""
+    B, F, _ = frames.shape
+    x = frames.astype(_cdtype(cfg)) + _sinusoid(F, cfg.d_model, _cdtype(cfg))
+    positions = jnp.broadcast_to(jnp.arange(F), (B, F))
+    x, _, _ = _scan_blocks(params["enc_layers"], x, cfg, positions,
+                           use_moe=False, causal=False, rope=False)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _whisper_trunk(params, x, cfg, positions, memory, caches=None,
+                   cache_pos=None):
+    if caches is None:
+        def body(carry, lp):
+            h = carry
+            h, _ = _decdec_block_fwd(lp, h, memory, cfg, positions)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["dec_layers"])
+        return x, jnp.float32(0.0), None
+
+    def body(h, inp):
+        lp, lc = inp
+        h, nc = _decdec_block_fwd(lp, h, memory, cfg, positions, cache=lc,
+                                  cache_pos=cache_pos)
+        return h, nc
+    x, new_c = jax.lax.scan(body, x, (params["dec_layers"], caches["self"]))
+    return x, jnp.float32(0.0), {"self": new_c}
+
+
+# ===========================================================================
+# Public API
+# ===========================================================================
+
+def init_model(key, cfg: ModelConfig):
+    if cfg.encoder is not None:
+        return _init_whisper(key, cfg)
+    if cfg.hybrid is not None:
+        return _init_zamba(key, cfg)
+    if cfg.ssm is not None and cfg.ssm.kind == "xlstm":
+        return _init_xlstm(key, cfg)
+    if cfg.vision is not None:
+        return _init_vlm(key, cfg)
+    return _init_decoder(key, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Training / prefill forward. batch: tokens (B,S) [+frames|patches]."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cd = _cdtype(cfg)
+    x = embed(params["embed"], tokens, cd)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.encoder is not None:
+        memory = whisper_encode(params, batch["frames"], cfg)
+        x, aux, _ = _whisper_trunk(params, x, cfg, positions, memory)
+    elif cfg.hybrid is not None:
+        x, aux, _ = _zamba_trunk(params, x, cfg, positions)
+    elif cfg.ssm is not None and cfg.ssm.kind == "xlstm":
+        x, aux, _ = _xlstm_trunk(params, x, cfg, positions)
+    elif cfg.vision is not None:
+        memory = (batch["patches"].astype(cd) @
+                  params["vision_proj"].astype(cd))
+        x, aux, _ = _vlm_trunk(params, x, cfg, positions, memory)
+    else:
+        x, aux, _ = _decoder_trunk(params, x, cfg, positions)
+        if cfg.mtp_depth and "labels" in batch:
+            aux = aux + _mtp_loss(params, x, batch, cfg, positions)
+        return _logits(params, x, cfg), aux
+    return _logits(params, x, cfg), aux
+
+
+def _ce(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = forward(params, batch, cfg)
+    loss = _ce(logits, batch["labels"]) + aux
+    acc = jnp.mean(jnp.argmax(logits, -1) == batch["labels"])
+    return loss, {"loss": loss, "aux": aux, "accuracy": acc}
+
+
+# --- decode -----------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, length: int):
+    if cfg.encoder is not None:
+        L = min(length, cfg.encoder.max_decoder_len)
+        return {"self": _stacked_cache(cfg, cfg.n_layers, batch, L)}
+    if cfg.hybrid is not None:
+        every = cfg.hybrid.shared_attn_every
+        n_groups = cfg.n_layers // every
+        mc = _stack_tree(ssm_lib.init_mamba_cache(cfg, batch),
+                         (n_groups, every))
+        L = min(length, cfg.sliding_window) if cfg.sliding_window else length
+        ac = _stacked_cache(cfg, n_groups, batch, L)
+        return {"mamba": mc, "attn": ac}
+    if cfg.ssm is not None and cfg.ssm.kind == "xlstm":
+        every = cfg.ssm.slstm_every or 0
+        n_groups = max(1, cfg.n_layers // every) if every else 1
+        n_m = (every - 1) if every else cfg.n_layers
+        mc = _stack_tree(ssm_lib.init_mlstm_cache(cfg, batch),
+                         (n_groups, n_m))
+        out = {"mlstm": mc}
+        if every:
+            out["slstm"] = _stack_tree(ssm_lib.init_slstm_cache(cfg, batch),
+                                       (n_groups,))
+        return out
+    if cfg.vision is not None:
+        every = cfg.vision.cross_attn_every
+        n_groups = cfg.n_layers // every
+        sc = _stack_tree(_block_cache(cfg, batch, length),
+                         (n_groups, every - 1))
+        return {"self": sc}
+    moe_cfg = cfg.moe
+    n_dense = moe_cfg.first_dense_layers if moe_cfg else cfg.n_layers
+    out = {}
+    if n_dense:
+        out["dense"] = _stacked_cache(cfg, n_dense, batch, length)
+    if moe_cfg and cfg.n_layers - n_dense:
+        out["moe"] = _stacked_cache(cfg, cfg.n_layers - n_dense, batch, length)
+    return out
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, memory=None):
+    """tokens: (B, 1); pos: scalar int32 — current write index.
+    Returns (logits (B,1,V), new_cache)."""
+    B = tokens.shape[0]
+    cd = _cdtype(cfg)
+    x = embed(params["embed"], tokens, cd)
+    positions = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    if cfg.encoder is not None:
+        pos_c = jnp.minimum(pos, cfg.encoder.max_decoder_len - 1)
+        x, _, nc = _whisper_trunk(params, x, cfg, positions, memory,
+                                  caches=cache, cache_pos=pos_c)
+    elif cfg.hybrid is not None:
+        x, _, nc = _zamba_trunk(params, x, cfg, positions, caches=cache,
+                                cache_pos=pos)
+    elif cfg.ssm is not None and cfg.ssm.kind == "xlstm":
+        x, _, nc = _xlstm_trunk(params, x, cfg, positions, caches=cache,
+                                cache_pos=pos)
+    elif cfg.vision is not None:
+        x, _, nc = _vlm_trunk(params, x, cfg, positions, memory, caches=cache,
+                              cache_pos=pos)
+    else:
+        x, _, nc = _decoder_trunk(params, x, cfg, positions, caches=cache,
+                                  cache_pos=pos)
+    return _logits(params, x, cfg), nc
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))

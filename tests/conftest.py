@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device. Only dryrun subprocess tests use
+# --xla_force_host_platform_device_count, in their own interpreter.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,89 @@
+"""FIFO online buffer invariants (hypothesis) + video-caching dataset."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffer import OnlineBuffer, binomial_arrivals
+from repro.data.video_caching import (D1_DIM, F_FILES, FILES_PER_GENRE,
+                                      G_GENRES, make_population,
+                                      zipf_mandelbrot_pmf)
+
+
+@given(st.integers(1, 40), st.lists(st.integers(0, 9), min_size=0,
+                                    max_size=120))
+@settings(max_examples=30, deadline=None)
+def test_fifo_buffer_invariants(capacity, labels):
+    buf = OnlineBuffer.create(capacity, (3,), 10)
+    for i, y in enumerate(labels):
+        buf.stage(np.full((1, 3), i, np.float32), np.array([y]))
+        buf.commit()
+        assert buf.size <= capacity
+    x, y = buf.dataset()
+    assert len(y) == min(len(labels), capacity)
+    # FIFO: buffer holds exactly the last `size` samples, in arrival order
+    expect = labels[-buf.size:] if buf.size else []
+    assert list(y) == expect
+    if buf.size:
+        assert x[0, 0] == len(labels) - buf.size    # oldest retained sample
+
+
+def test_staged_arrivals_apply_only_on_commit():
+    buf = OnlineBuffer.create(4, (1,), 5)
+    buf.stage(np.zeros((2, 1), np.float32), np.array([1, 2]))
+    assert buf.size == 0                    # paper: temp buffer within round
+    n = buf.commit()
+    assert n == 2 and buf.size == 2
+
+
+def test_label_histogram_normalized():
+    buf = OnlineBuffer.create(10, (1,), 5)
+    buf.stage(np.zeros((6, 1), np.float32), np.array([0, 0, 1, 2, 3, 4]))
+    buf.commit()
+    h = buf.label_histogram()
+    np.testing.assert_allclose(h.sum(), 1.0)
+    assert h[0] == pytest.approx(2 / 6)
+
+
+def test_distribution_shift_zero_when_static():
+    buf = OnlineBuffer.create(8, (1,), 4)
+    buf.stage(np.zeros((4, 1), np.float32), np.array([0, 1, 2, 3]))
+    buf.commit()
+    buf.distribution_shift()                # initializes last_hist
+    assert buf.distribution_shift() == 0.0  # Definition 1: Phi^0 = 0 shift
+
+
+@given(st.integers(0, 30), st.floats(0.0, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_binomial_arrivals_bounded(e_u, p):
+    rng = np.random.default_rng(0)
+    n = binomial_arrivals(rng, e_u, p)
+    assert 0 <= n <= e_u
+
+
+def test_zipf_mandelbrot_pmf():
+    pmf = zipf_mandelbrot_pmf(20, gamma=1.2, q=2.0)
+    np.testing.assert_allclose(pmf.sum(), 1.0)
+    assert np.all(np.diff(pmf) <= 1e-12)    # decreasing in rank
+
+
+def test_video_caching_dataset_shapes_and_labels():
+    cat, streams = make_population(0, 3)
+    x, y = streams[0].draw_dataset1(50)
+    assert x.shape == (50, D1_DIM)
+    assert np.all((y >= 0) & (y < F_FILES))
+    x2, y2 = streams[1].draw_dataset2(40)
+    assert x2.shape == (40, 10)
+    assert np.all((x2 >= 0) & (x2 < F_FILES))
+    # sliding window: next window starts with the previous window shifted
+    assert list(x2[1][:-1]) != list(x2[1][1:])  # non-degenerate
+
+
+def test_request_model_respects_genre_structure():
+    cat, streams = make_population(1, 1)
+    s = streams[0]
+    reqs = [s.user.next_request(s.rng, cat) for _ in range(200)]
+    genres = np.array(reqs) // FILES_PER_GENRE
+    assert set(genres) <= set(range(G_GENRES))
+    # exploitation makes consecutive same-genre requests common
+    same = np.mean(genres[1:] == genres[:-1])
+    assert same > 0.3

@@ -1,0 +1,107 @@
+"""Dry-run machinery: HLO analyzer unit tests + a small-mesh lower/compile in
+a subprocess (jax device count is locked at first init, so the 512-device
+production dry-run runs via the module's own entrypoint)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (analyze_hlo, parse_module, shape_bytes,
+                                       shape_elems)
+
+
+def test_shape_parsing():
+    assert shape_bytes("f32[4,8]{1,0}") == 128
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("(f32[2], s32[3])") == 20
+    assert shape_elems("f32[3,5]") == 15
+    assert shape_bytes("pred[7]") == 7
+
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %p = (s32[], f32[8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8]{0} get-tuple-element(%p), index=1
+      %ar = f32[8]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+      ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+    }
+
+    %cond (p: (s32[], f32[8])) -> pred[] {
+      %p = (s32[], f32[8]) parameter(0)
+      ROOT %lt = pred[] constant(true)
+    }
+
+    ENTRY %main (a: f32[4,6], b: f32[6,8]) -> f32[8] {
+      %a = f32[4,6]{1,0} parameter(0)
+      %b = f32[6,8]{1,0} parameter(1)
+      %d = f32[4,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %init = (s32[], f32[8]) tuple()
+      %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+      ROOT %out = f32[8]{0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_analyzer_counts_dot_and_loop_collectives():
+    a = analyze_hlo(HLO)
+    assert a.flops == 2 * 4 * 8 * 6                     # one dot
+    assert a.collective_bytes["all-reduce"] == 8 * 4 * 5  # trip count 5
+    assert a.collective_counts["all-reduce"] == 5
+
+
+def _dryrun_subprocess(code: str) -> dict:
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+SMALL_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import json
+    import repro.launch.dryrun as dr
+    rec = dr.run_one("xlstm-350m", "decode_32k", out_dir="/tmp/dryrun_test",
+                     verbose=False)
+    rec2 = dr.run_one("xlstm-350m", "long_500k", out_dir="/tmp/dryrun_test",
+                      verbose=False)
+    print(json.dumps({
+        "dominant": rec["roofline"]["dominant"],
+        "flops": rec["per_device"]["flops"],
+        "coll": rec["per_device"]["collective_bytes"],
+        "long_ok": "roofline" in rec2,
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_production_mesh_dryrun_decode():
+    res = _dryrun_subprocess(SMALL_DRYRUN)
+    assert res["flops"] > 0
+    assert res["long_ok"]                       # ssm runs long_500k
+
+
+SKIP_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import json
+    import repro.launch.dryrun as dr
+    rec = dr.run_one("qwen1.5-4b", "long_500k", out_dir="/tmp/dryrun_test",
+                     verbose=False)
+    print(json.dumps({"skipped": "skipped" in rec}))
+""")
+
+
+@pytest.mark.slow
+def test_long_context_skipped_for_full_attention():
+    res = _dryrun_subprocess(SKIP_DRYRUN)
+    assert res["skipped"]

@@ -1,0 +1,75 @@
+"""Pallas kernel validation: shape/dtype sweeps, assert_allclose vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.scored_reduce import osafl_scores_fused, scored_reduce
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D", [
+    (2, 4, 4, 128, 64),       # MHA
+    (1, 8, 2, 256, 64),       # GQA 4:1
+    (2, 4, 1, 128, 128),      # MQA
+    (1, 2, 2, 512, 32),       # long-ish seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_reference(B, H, Hkv, S, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), dtype)
+    out = flash_attention_bhsd(q, k, v, causal=True, block_q=64, block_k=64)
+    expect = ref.mha_reference(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 32), (64, 32), (128, 128)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    out = flash_attention_bhsd(q, k, v, block_q=block_q, block_k=block_k)
+    expect = ref.mha_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 128, 64))
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    out = flash_attention_bhsd(q, k, v, causal=False, block_q=64, block_k=64)
+    expect = ref.mha_reference(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("U,N,block", [
+    (4, 1000, 256), (16, 4096, 1024), (8, 131, 64), (2, 17, 2048),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scored_reduce_matches_reference(U, N, block, dtype):
+    d = jax.random.normal(jax.random.PRNGKey(0), (U, N), dtype)
+    mean = jnp.mean(d.astype(jnp.float32), axis=0)
+    dots, norms, msq = scored_reduce(d, mean, block_n=block)
+    rd, rn, rm = ref.scored_reduce_reference(d, mean)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(dots, rd, rtol=tol, atol=tol)
+    np.testing.assert_allclose(norms, rn, rtol=tol, atol=tol)
+    np.testing.assert_allclose(msq, rm, rtol=tol, atol=tol)
+
+
+def test_fused_scores_match_reference_and_paper_bounds():
+    d = jax.random.normal(jax.random.PRNGKey(3), (8, 5000))
+    lam = np.asarray(osafl_scores_fused(d, chi=1.0))
+    lam_ref = np.asarray(ref.osafl_scores_reference(d, chi=1.0))
+    np.testing.assert_allclose(lam, lam_ref, rtol=1e-5, atol=1e-6)
+    assert np.all(lam >= 0.0) and np.all(lam <= 1.0)   # eq. 21 with chi=1

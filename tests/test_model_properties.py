@@ -1,0 +1,152 @@
+"""Property tests on model-component invariants (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import apply_rope, rmsnorm, init_rmsnorm
+from repro.models.moe import init_moe, moe_fwd, _capacity
+from repro.models import ssm as ssm_lib
+
+
+# --- RoPE ---------------------------------------------------------------
+
+@given(st.integers(1, 3), st.integers(2, 16), st.sampled_from([32, 64]))
+@settings(max_examples=15, deadline=None)
+def test_rope_preserves_norm(b, s, d):
+    """Rotations preserve the per-pair L2 norm of q/k vectors."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, s, 2, d))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    d = 64
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, d))
+
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]))
+        kj = apply_rope(k, jnp.array([[j]]))
+        return float(jnp.vdot(qi, kj))
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(0, 0) == pytest.approx(dot_at(100, 100), rel=1e-4)
+
+
+# --- RMSNorm ------------------------------------------------------------
+
+@given(st.floats(0.25, 4.0))
+@settings(max_examples=15, deadline=None)
+def test_rmsnorm_scale_invariance(scale):
+    """rmsnorm(c*x) ~= rmsnorm(x) for positive scalar c (up to the eps
+    regularizer, which breaks exact invariance by design)."""
+    p = init_rmsnorm(16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    a = rmsnorm(p, x)
+    b = rmsnorm(p, scale * x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+# --- MoE ----------------------------------------------------------------
+
+def _moe_cfg(E=4, k=2, cap=50.0):
+    base = get_config("arctic-480b").reduced()
+    return dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, num_experts=E, top_k=k,
+                                      capacity_factor=cap,
+                                      dense_residual_d_ff=0))
+
+
+def test_moe_no_drop_matches_dense_mixture():
+    """With huge capacity, the sort-dispatch MoE must equal the naive
+    'compute every expert, mix by gates' reference."""
+    cfg = _moe_cfg()
+    m = cfg.moe
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, aux = moe_fwd(params, x, cfg)
+
+    # naive reference
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top, idx = jax.lax.top_k(probs, m.top_k)
+    top = top / top.sum(-1, keepdims=True)
+    out = jnp.zeros_like(xt)
+    for e in range(m.num_experts):
+        h = jax.nn.silu(xt @ params["w_gate"][e]) * (xt @ params["w_up"][e])
+        ye = h @ params["w_down"][e]
+        w = jnp.where(idx == e, top, 0.0).sum(-1)
+        out = out + w[:, None] * ye
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(out), atol=2e-4, rtol=2e-3)
+    assert float(aux) >= 0.0
+
+
+@given(st.integers(4, 64), st.integers(1, 4), st.integers(2, 8),
+       st.floats(1.0, 2.0))
+@settings(max_examples=25, deadline=None)
+def test_moe_capacity_bounds(T, k, E, factor):
+    c = _capacity(T, k, E, factor)
+    assert 1 <= c <= T
+
+
+def test_moe_aux_loss_penalizes_imbalance():
+    """Forcing all tokens to one expert must raise the aux loss vs uniform."""
+    cfg = _moe_cfg()
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    _, aux_uniform = moe_fwd(params, x, cfg)
+    # bias the logits through the input: all-positive tokens + a large
+    # positive router column make expert 0 the top-1 for every token
+    biased = dict(params)
+    bias = jnp.zeros_like(params["router"]).at[:, 0].set(50.0)
+    biased["router"] = params["router"] + bias
+    x_pos = jnp.abs(x) + 1.0
+    _, aux_biased = moe_fwd(biased, x_pos, cfg)
+    _, aux_pos_uniform = moe_fwd(params, x_pos, cfg)
+    assert float(aux_biased) > float(aux_pos_uniform)
+
+
+# --- Mamba2 chunked == different chunk sizes -------------------------------
+
+@pytest.mark.parametrize("chunks", [(8, 16), (16, 32)])
+def test_mamba_chunk_size_invariance(chunks):
+    """The chunked SSD result must not depend on the chunk size."""
+    base = get_config("zamba2-2.7b").reduced()
+    cfg1 = dataclasses.replace(base, ssm=dataclasses.replace(
+        base.ssm, chunk_size=chunks[0]), dtype="float32")
+    cfg2 = dataclasses.replace(base, ssm=dataclasses.replace(
+        base.ssm, chunk_size=chunks[1]), dtype="float32")
+    params = ssm_lib.init_mamba(jax.random.PRNGKey(0), cfg1)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg1.d_model))
+    y1 = ssm_lib.mamba_fwd(params, x, cfg1)
+    y2 = ssm_lib.mamba_fwd(params, x, cfg2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-3)
+
+
+# --- mLSTM chunked == quadratic ---------------------------------------------
+
+@pytest.mark.parametrize("L,Q", [(64, 16), (96, 32), (128, 64)])
+def test_mlstm_chunked_matches_quadratic(L, Q):
+    """The chunkwise-stabilized mLSTM must equal the quadratic parallel form
+    (it replaces it for long prefill, §Perf)."""
+    base = get_config("xlstm-350m").reduced()
+    cfg = dataclasses.replace(base, dtype="float32",
+                              ssm=dataclasses.replace(base.ssm, chunk_size=Q))
+    params = ssm_lib.init_mlstm(jax.random.PRNGKey(0), cfg)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, L, cfg.d_model))
+    yq = ssm_lib._mlstm_fwd_quadratic(params, x, cfg)
+    yc = ssm_lib.mlstm_fwd_chunked(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(yq), np.asarray(yc),
+                               atol=1e-5, rtol=1e-4)

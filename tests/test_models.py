@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (reduced configs: 2 layers, d_model<=256,
+<=4 experts) + decode/forward consistency for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TRANSFORMER_ARCHS, get_config
+from repro.models import (decode_step, forward, init_cache, init_model,
+                          loss_fn, param_count)
+from repro.models.transformer import whisper_encode
+
+
+def _batch(cfg, B=2, S=64, key=0):
+    k = jax.random.PRNGKey(key)
+    toks = jax.random.randint(k, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.encoder is not None:
+        batch["frames"] = 0.02 * jax.random.normal(
+            k, (B, cfg.encoder.n_frames, cfg.d_model))
+    if cfg.vision is not None:
+        batch["patches"] = 0.02 * jax.random.normal(
+            k, (B, cfg.vision.n_patches, cfg.vision.d_vision))
+    return batch
+
+
+def _memory(cfg, params, batch):
+    if cfg.encoder is not None:
+        return whisper_encode(params, batch["frames"], cfg)
+    if cfg.vision is not None:
+        return (batch["patches"].astype(jnp.bfloat16)
+                @ params["vision_proj"].astype(jnp.bfloat16))
+    return None
+
+
+@pytest.mark.parametrize("arch", TRANSFORMER_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one SGD train step on CPU: shapes right, loss finite,
+    params move."""
+    cfg = get_config(arch).reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+    assert logits.shape == (2, 64, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    loss, metrics = loss_fn(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda p: loss_fn(p, batch, cfg)[0])(params)
+    new = jax.tree.map(lambda w, gg: w - 0.1 * gg, params, g)
+    moved = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new)))
+    assert moved > 0.0
+    # loss should decrease after the step on the same batch
+    loss2, _ = loss_fn(new, batch, cfg)
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", TRANSFORMER_ARCHS)
+def test_decode_matches_forward(arch):
+    """Token-by-token decode must reproduce the training forward's logits.
+    This pins: MLA absorbed decode == naive, mamba chunked == recurrent,
+    mLSTM parallel == recurrent, ring-buffer SWA, cross-attn caches."""
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        # capacity-based token dropping is batch-composition dependent by
+        # design; disable drops so decode and prefill see identical routing
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=50.0))
+    # this test checks the *math* (absorbed MLA, chunked SSD, parallel vs
+    # recurrent mLSTM); run compute in fp32 so bf16 accumulation-order noise
+    # doesn't mask real errors
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 32
+    batch = _batch(cfg, B=B, S=S, key=2)
+    logits_full, _ = forward(params, batch, cfg)
+
+    memory = _memory(cfg, params, batch)
+    cache = init_cache(cfg, B, S)
+    step = jax.jit(lambda p, c, t, i, m: decode_step(p, c, t, i, cfg,
+                                                     memory=m))
+    outs = []
+    for i in range(S):
+        lg, cache = step(params, cache, batch["tokens"][:, i:i + 1],
+                         jnp.int32(i), memory)
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32), np.asarray(logits_full,
+                                                       np.float32),
+        atol=6e-3, rtol=1e-2)
+
+
+@pytest.mark.parametrize("arch", TRANSFORMER_ARCHS)
+def test_param_counts_positive(arch):
+    cfg = get_config(arch).reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    n = param_count(params)
+    assert n > 10_000
+
+
+def test_full_config_dims():
+    """The full (non-reduced) configs carry the exact assigned dimensions."""
+    expect = {
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129_280),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32_000),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10_240, 32_000),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24_576, 256_000),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10_240, 32_000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51_865),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151_936),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14_336, 128_256),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50_304),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19_200, 32_256),
+    }
+    for arch, (L, d, H, Hkv, ff, V) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, H, Hkv, ff, V), arch
+    assert get_config("deepseek-v3-671b").moe.num_experts == 256
+    assert get_config("deepseek-v3-671b").moe.top_k == 8
+    assert get_config("arctic-480b").moe.num_experts == 128
+    assert get_config("arctic-480b").moe.top_k == 2
+    assert get_config("zamba2-2.7b").ssm.d_state == 64
+
+
+def test_small_models():
+    from repro.models import init_small, small_forward, small_loss
+    from repro.data.video_caching import D1_DIM
+    key = jax.random.PRNGKey(0)
+    x1 = jax.random.normal(key, (4, D1_DIM))
+    for name in ("fcn", "cnn", "squeezenet"):
+        p = init_small(key, name)
+        logits = small_forward(p, x1, name)
+        assert logits.shape == (4, 100)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+    p = init_small(key, "lstm")
+    x2 = jax.random.randint(key, (4, 10), 0, 100)
+    logits = small_forward(p, x2, "lstm")
+    assert logits.shape == (4, 100)
+    loss, m = small_loss(p, {"x": x2, "y": jnp.zeros(4, jnp.int32)}, "lstm")
+    assert bool(jnp.isfinite(loss))

@@ -1,0 +1,107 @@
+"""Resource optimizer (paper Section II-C, Lemmas 1-2, SCA): feasibility and
+optimality properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.resource import (FPP, ChannelState, ClientSystem,
+                                 NetworkConfig, _comp_coeff, _rate,
+                                 _upload_energy, _upload_time, make_clients,
+                                 optimal_frequency, optimal_kappa,
+                                 optimize_client, optimize_round,
+                                 pathloss_linear, sample_channel)
+
+NET = NetworkConfig()
+
+
+def _sys(rng=None, **kw):
+    base = dict(c=30.0, s=101_376.0, f_max=1.5e9, p_max=0.5, e_bd=2.0,
+                distance=400.0)
+    base.update(kw)
+    return ClientSystem(**base)
+
+
+def _ch(xi_db=-100.0, gamma=1.0):
+    return ChannelState(xi=10 ** (xi_db / 10), gamma=gamma)
+
+
+def test_feasible_decision_satisfies_constraints():
+    rng = np.random.default_rng(1)
+    clients = make_clients(rng, 30)
+    n_params = 1_000_000
+    decisions = optimize_round(rng, NET, clients, n_params)
+    for sys, dec in zip(clients, decisions):
+        if not dec.feasible:
+            continue
+        assert 1 <= dec.kappa <= NET.kappa_max
+        assert 0 < dec.f <= sys.f_max * (1 + 1e-9)
+        assert 0 < dec.p <= sys.p_max * (1 + 1e-9)
+        assert dec.t_total <= NET.t_th * (1 + 1e-5)
+        assert dec.e_total <= sys.e_bd * (1 + 1e-5)
+
+
+def test_lemma1_kappa_is_maximal():
+    """kappa* from Lemma 1: kappa*+1 must violate energy or deadline."""
+    sys = _sys()
+    ch = _ch()
+    n_params = 2_000_000
+    f, p = 1.2e9, 0.05
+    k = optimal_kappa(NET, sys, ch, f, p, n_params)
+    if 1 <= k < NET.kappa_max:
+        cc = _comp_coeff(NET, sys)
+        e = 0.5 * NET.v * cc * (k + 1) * f ** 2 + \
+            _upload_energy(NET, ch, p, n_params)
+        t = cc * (k + 1) / f + _upload_time(NET, ch, p, n_params)
+        assert e > sys.e_bd or t > NET.t_th
+
+
+def test_lemma2_frequency_meets_deadline_exactly():
+    """f* (eq. 44) makes compute time + upload time == t_th."""
+    sys = _sys()
+    ch = _ch(-95.0)
+    kappa, p, n_params = 3, 0.05, 2_000_000
+    f = optimal_frequency(NET, sys, ch, kappa, p, n_params)
+    if np.isfinite(f):
+        t = _comp_coeff(NET, sys) * kappa / f + _upload_time(NET, ch, p,
+                                                             n_params)
+        np.testing.assert_allclose(t, NET.t_th, rtol=1e-9)
+
+
+@given(st.floats(-115.0, -85.0), st.floats(0.5, 2.0))
+@settings(max_examples=25, deadline=None)
+def test_better_channel_never_reduces_kappa(xi_db, gamma):
+    """Monotonicity: improving the channel can only help."""
+    sys = _sys()
+    n_params = 3_000_000
+    d1 = optimize_client(NET, sys, _ch(xi_db, gamma), n_params)
+    d2 = optimize_client(NET, sys, _ch(xi_db + 6.0, gamma), n_params)
+    if d1.feasible:
+        assert d2.feasible
+        assert d2.kappa >= d1.kappa - 1     # alternation tolerance
+
+
+def test_larger_payload_increases_stragglers():
+    rng = np.random.default_rng(0)
+    clients = make_clients(rng, 60)
+    strag = []
+    for n_params in (500_000, 2_000_000, 8_000_000):
+        rng2 = np.random.default_rng(7)
+        dec = optimize_round(rng2, NET, clients, n_params)
+        strag.append(sum(1 for d in dec if not d.feasible))
+    assert strag[0] <= strag[1] <= strag[2]
+
+
+def test_pathloss_monotonic_in_distance():
+    assert pathloss_linear(100) > pathloss_linear(500) > pathloss_linear(2000)
+
+
+def test_infeasible_when_upload_alone_exceeds_deadline():
+    sys = _sys(p_max=0.001, e_bd=0.5)
+    ch = _ch(-135.0)                       # terrible channel
+    dec = optimize_client(NET, sys, ch, 50_000_000)
+    assert not dec.feasible and dec.kappa == 0
+
+
+def test_rate_monotone_in_power():
+    ch = _ch()
+    assert _rate(NET, ch, 0.5) > _rate(NET, ch, 0.05) > 0

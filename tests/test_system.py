@@ -1,0 +1,110 @@
+"""End-to-end system tests: full OSAFL rounds (resource optimization ->
+time-varying buffers -> local training -> scored aggregation) on the paper's
+video-caching task, plus checkpointing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.configs.base import FLConfig
+from repro.core.baselines import make_server
+from repro.core.buffer import OnlineBuffer, binomial_arrivals
+from repro.core.client import local_train
+from repro.core.osafl import ClientUpdate
+from repro.core.resource import NetworkConfig, make_clients, optimize_round
+from repro.data.video_caching import D1_DIM, make_population
+from repro.models.small import init_small, small_loss
+
+
+def _setup(u=4, cap=60, seed=0):
+    cat, streams = make_population(seed, u)
+    bufs = []
+    for s in streams:
+        buf = OnlineBuffer.create(cap, (D1_DIM,), 100)
+        x, y = s.draw_dataset1(cap)
+        buf.stage(x, y)
+        buf.commit()
+        bufs.append(buf)
+    return streams, bufs
+
+
+def _run_fl(alg, rounds=8, u=4, seed=0):
+    streams, bufs = _setup(u=u, seed=seed)
+    rng = np.random.default_rng(seed)
+    grad_fn = jax.grad(lambda p, b: small_loss(p, b, "fcn")[0])
+    params = init_small(jax.random.PRNGKey(seed), "fcn")
+    fl = FLConfig(num_clients=u, local_lr=0.05, global_lr=2.0, algorithm=alg)
+    server = make_server(params, fl, u)
+    for t in range(rounds):
+        updates = []
+        for c in range(u):
+            n = binomial_arrivals(rng, 8, streams[c].user.p_ac)
+            if n:
+                x, y = streams[c].draw_dataset1(n)
+                bufs[c].stage(x, y)
+            bufs[c].commit()
+            kappa = int(rng.integers(1, 5))
+            d, w = local_train(
+                server.params, grad_fn, bufs[c], kappa, fl.local_lr, 16, rng,
+                prox_mu=fl.fedprox_mu if alg == "fedprox" else 0.0)
+            upd = d if alg in ("osafl", "fednova", "afa_cd") else w
+            updates.append(ClientUpdate(c, upd, kappa,
+                                        data_size=bufs[c].size,
+                                        label_hist=bufs[c].label_histogram()))
+        server.round(updates)
+    # evaluate on pooled client data
+    xs, ys = zip(*[b.dataset() for b in bufs])
+    batch = {"x": jnp.asarray(np.concatenate(xs)),
+             "y": jnp.asarray(np.concatenate(ys))}
+    loss, m = small_loss(server.params, batch, "fcn")
+    return float(loss), float(m["accuracy"]), server
+
+
+def test_osafl_end_to_end_learns():
+    loss, acc, server = _run_fl("osafl", rounds=10)
+    assert np.isfinite(loss)
+    assert loss < 4.6                     # started at ~ln(100)=4.6
+    assert np.all(server.last_scores >= 0) and np.all(
+        server.last_scores <= 1)
+
+
+@pytest.mark.parametrize("alg", ["fedavg", "fedprox", "fednova", "afa_cd",
+                                 "feddisco"])
+def test_baselines_end_to_end_run(alg):
+    loss, acc, _ = _run_fl(alg, rounds=3)
+    assert np.isfinite(loss)
+
+
+def test_resource_optimizer_feeds_fl_round():
+    """Full paper pipeline: stragglers get kappa=0 and keep stale buffers."""
+    rng = np.random.default_rng(0)
+    net = NetworkConfig()
+    clients = make_clients(rng, 8)
+    decisions = optimize_round(rng, net, clients, n_params=3_900_000)
+    kappas = [d.kappa for d in decisions]
+    assert all(0 <= k <= net.kappa_max for k in kappas)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = init_small(jax.random.PRNGKey(0), "fcn")
+    path = tmp_path / "ckpt.npz"
+    checkpoint.save(path, params, step=7, metadata={"alg": "osafl"})
+    like = init_small(jax.random.PRNGKey(1), "fcn")
+    restored = checkpoint.restore(path, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert checkpoint.load_metadata(path)["step"] == 7
+
+
+def test_buffer_distribution_shifts_under_arrivals():
+    """Sanity on the paper's premise: with arrivals, the online buffer's
+    label histogram shifts round to round (Phi_u^t > 0)."""
+    streams, bufs = _setup(u=1, cap=40)
+    shifts = []
+    for _ in range(6):
+        x, y = streams[0].draw_dataset1(10)
+        bufs[0].stage(x, y)
+        bufs[0].commit()
+        shifts.append(bufs[0].distribution_shift())
+    assert max(shifts[1:]) > 0.0
