@@ -12,14 +12,14 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core.baselines import make_server
 from repro.core.buffer import OnlineBuffer, binomial_arrivals
-from repro.core.client import local_train
+from repro.core.client import local_train, make_vmapped_local_train
 from repro.core.osafl import ClientUpdate
 from repro.core.resource import (NetworkConfig, make_clients, optimize_round)
 from repro.data.video_caching import D1_DIM, make_population
 from repro.models.small import REGISTRY, init_small, small_loss
 
 MODEL_PARAMS = {"fcn": 3_900_000, "cnn": 1_100_000, "squeezenet": 740_000,
-                "lstm": 430_000}
+                "lstm": 430_000, "mlp": 18_000}
 
 
 @dataclass
@@ -107,6 +107,76 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400):
         history.append({"round": t, "test_loss": float(loss),
                         "test_acc": float(m["accuracy"]),
                         "participants": len(updates)})
+    return history
+
+
+def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
+                              eval_samples: int = 400):
+    """Stacked-engine counterpart of ``run_experiment``: the whole cohort
+    trains under one ``jax.vmap`` and the server round is one vectorized
+    (U, N)-buffer update, so ``xc.num_clients`` can be hundreds to thousands.
+
+    Scale-harness simplifications vs the paper-faithful loop harness
+    (recorded in EXPERIMENTS.md): every client holds a fixed-size stationary
+    dataset of ``capacity[0]`` samples (drawn once — no FIFO arrivals), and
+    round participation is Bernoulli(p_ac) with kappa ~ Uniform{1..kappa_max}
+    instead of the per-client numpy resource optimizer.
+    """
+    model = xc.model
+    U = xc.num_clients
+    cat, streams = make_population(xc.seed, U, topk=xc.topk)
+    rng = np.random.default_rng(xc.seed)
+    cap = xc.capacity[0]
+    data = [_draw(s, cap, xc.dataset) for s in streams]
+    data_x = np.stack([d[0] for d in data])           # (U, cap, ...)
+    data_y = np.stack([d[1] for d in data])           # (U, cap)
+    p_ac = np.array([s.user.p_ac for s in streams])
+
+    per = max(eval_samples // U, 4)
+    tests = [_draw(s, per, xc.dataset) for s in streams]
+    test_batch = {"x": jnp.asarray(np.concatenate([t[0] for t in tests])),
+                  "y": jnp.asarray(np.concatenate([t[1] for t in tests]))}
+
+    grad_fn = jax.grad(lambda p, b: small_loss(p, b, model)[0])
+    params = init_small(jax.random.PRNGKey(xc.seed), model)
+    glr = xc.global_lr if alg in ("osafl", "afa_cd") else 1.0
+    fl = FLConfig(num_clients=U, local_lr=xc.local_lr, global_lr=glr,
+                  algorithm=alg, engine="stacked")
+    server = make_server(params, fl, U, seed=xc.seed)
+    codec = server.codec
+
+    local_step = make_vmapped_local_train(
+        grad_fn, fl.local_lr, fl.kappa_max,
+        prox_mu=fl.fedprox_mu if alg == "fedprox" else 0.0)
+    if alg == "feddisco":
+        hists = np.stack([np.bincount(y, minlength=100) / len(y)
+                          for y in data_y])
+    weights_alg = alg in ("fedavg", "fedprox", "feddisco")
+
+    history = []
+    for t in range(xc.rounds):
+        active = rng.random(U) < p_ac
+        kappas = np.where(active, rng.integers(1, fl.kappa_max + 1, U), 0)
+        idx = rng.integers(0, cap, (U, fl.kappa_max, xc.batch))
+        batches = {
+            "x": jnp.asarray(data_x[np.arange(U)[:, None, None], idx]),
+            "y": jnp.asarray(data_y[np.arange(U)[:, None, None], idx])}
+        d, w = local_step(server.params, batches, jnp.asarray(kappas))
+        upd = codec.flatten_stacked(w if weights_alg else d)
+        if alg == "fednova":
+            # round_stacked merges sizes/kappas for active clients only, so
+            # stragglers keep their last-seen kappa (loop meta semantics)
+            server.round_stacked(upd, active, sizes=np.full(U, cap),
+                                 kappas=kappas)
+        elif alg == "feddisco":
+            server.round_stacked(upd, active, sizes=np.full(U, cap),
+                                 hists=hists)
+        else:
+            server.round_stacked(upd, active)
+        loss, m = small_loss(server.params, test_batch, model)
+        history.append({"round": t, "test_loss": float(loss),
+                        "test_acc": float(m["accuracy"]),
+                        "participants": int(active.sum())})
     return history
 
 

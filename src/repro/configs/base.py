@@ -203,6 +203,11 @@ class FLConfig:
     feddisco_b: float = 0.1
     score_sketch_dim: int = 0         # 0 = exact scores (paper); >0 = sketched (§Perf)
     stale_scores: bool = False        # use round t-1 scores (§Perf A5 engine)
+    engine: str = "loop"              # loop (paper-faithful pytree reference)
+                                      # | stacked (vectorized (U, N) engine)
+    score_backend: str = "kernel"     # stacked engine scoring: kernel (fused
+                                      # Pallas scored_reduce) | reference
+                                      # (pure-jnp kernels/ref.py oracle)
     literal_init_buffer: bool = False # Algorithm 2's literal d[u]=w^t/eta for
                                       # never-participated clients (equivalent
                                       # to treating their model as 0; unstable

@@ -1,7 +1,9 @@
-from repro.core.osafl import ClientUpdate, OSAFLServer
+from repro.core.osafl import ClientUpdate, OSAFLServer, StackedOSAFLServer
 from repro.core.baselines import make_server
-from repro.core.client import local_train
+from repro.core.client import local_train, make_vmapped_local_train
 from repro.core.buffer import OnlineBuffer, binomial_arrivals
+from repro.core.flatten import FlatCodec, make_codec
 
-__all__ = ["ClientUpdate", "OSAFLServer", "make_server", "local_train",
-           "OnlineBuffer", "binomial_arrivals"]
+__all__ = ["ClientUpdate", "OSAFLServer", "StackedOSAFLServer", "make_server",
+           "local_train", "make_vmapped_local_train", "OnlineBuffer",
+           "binomial_arrivals", "FlatCodec", "make_codec"]

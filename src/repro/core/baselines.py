@@ -21,9 +21,11 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
+from repro.core.flatten import make_codec, scatter_updates
 from repro.core.osafl import ClientUpdate
 from repro.core.scores import (tree_add, tree_scale, tree_sub,
                                tree_zeros_like)
@@ -127,6 +129,175 @@ class FedDiscoServer(_BufferedServer):
         return self.params
 
 
+# ---------------------------------------------------------------------------
+# Stacked (vectorized) baselines: same aggregation rules on the (U, N) flat
+# buffer used by StackedOSAFLServer. The ingest (write-back + staleness
+# refresh) is dense masked arithmetic; every aggregation is one matvec over
+# the stacked buffer instead of an O(U) Python tree loop.
+# ---------------------------------------------------------------------------
+
+
+class _StackedBufferedServer:
+    """Stacked counterpart of ``_BufferedServer``: one (U, N) f32 buffer plus
+    sticky per-client metadata arrays (data sizes, kappas, label histograms —
+    the loop servers keep the last seen ``ClientUpdate`` forever; here the
+    scalar fields live in dense arrays instead)."""
+
+    buffers_hold_weights = True      # False => buffers hold normalized grads d
+
+    def __init__(self, params, fl: FLConfig, num_clients: int, seed: int = 0):
+        self.fl = fl
+        self.U = num_clients
+        self.codec = make_codec(params)
+        self.w = self.codec.flatten(params)
+        self.participated = np.zeros(num_clients, bool)
+        if self.buffers_hold_weights:
+            init_row = self.w
+        else:
+            init_row = (self.w / fl.local_lr if fl.literal_init_buffer
+                        else jnp.zeros_like(self.w))
+        self.buffer = jnp.tile(init_row[None, :], (num_clients, 1))
+        self.sizes = np.ones(num_clients)        # loop default: size 1
+        self.kappas = np.ones(num_clients)
+        self.hists = None                        # lazily sized (U, C)
+        self.has_hist = np.zeros(num_clients, bool)
+
+    @property
+    def params(self):
+        return self.codec.unflatten(self.w)
+
+    def _ingest(self, updates: Sequence[ClientUpdate]):
+        d_new, active = scatter_updates(self.codec, updates, self.U)
+        for up in updates:
+            self.sizes[up.uid] = up.data_size    # loop meta semantics: the
+            self.kappas[up.uid] = up.kappa       # last seen update sticks
+            if up.label_hist is not None:
+                if self.hists is None:
+                    self.hists = np.zeros((self.U, len(up.label_hist)))
+                self.hists[up.uid] = up.label_hist
+                self.has_hist[up.uid] = True
+        self._ingest_stacked(jnp.asarray(d_new), active)
+
+    def _ingest_stacked(self, d_new: jnp.ndarray, active):
+        """Dense path: write back active rows, refresh never-participated."""
+        active = np.asarray(active, bool)
+        self.participated |= active
+        part = jnp.asarray(self.participated)
+        buf = jnp.where(jnp.asarray(active)[:, None], d_new, self.buffer)
+        if self.buffers_hold_weights:
+            refresh = self.w                               # averaging no-op
+        elif self.fl.literal_init_buffer:
+            refresh = self.w / self.fl.local_lr
+        else:
+            refresh = jnp.zeros_like(self.w)
+        self.buffer = jnp.where(part[:, None], buf, refresh[None, :])
+
+    def _weighted(self, ws) -> jnp.ndarray:
+        return jnp.asarray(ws, jnp.float32) @ self.buffer
+
+
+class StackedFedAvgServer(_StackedBufferedServer):
+    def round(self, updates: Sequence[ClientUpdate]):
+        self._ingest(updates)
+        self.w = self._weighted(np.full(self.U, 1.0 / self.U))
+        return self.params
+
+    def round_stacked(self, d_new: jnp.ndarray, active) -> jnp.ndarray:
+        self._ingest_stacked(d_new, active)
+        self.w = self._weighted(np.full(self.U, 1.0 / self.U))
+        return self.w
+
+
+class StackedFedProxServer(StackedFedAvgServer):
+    """Aggregation identical to FedAvg; clients add the proximal term."""
+    local_prox = True
+
+
+class StackedFedNovaServer(_StackedBufferedServer):
+    buffers_hold_weights = False
+
+    def _nova_weights(self) -> np.ndarray:
+        p = self.sizes / self.sizes.sum()
+        pk = p * self.kappas
+        tau_eff = self.fl.fednova_slowdown * pk.sum()
+        return self.fl.local_lr * tau_eff * pk / pk.sum()
+
+    def round(self, updates: Sequence[ClientUpdate]):
+        self._ingest(updates)
+        self.w = self.w - self._weighted(self._nova_weights())
+        return self.params
+
+    def round_stacked(self, d_new, active, sizes=None, kappas=None):
+        # merge metadata for ACTIVE clients only: the loop engine's meta is
+        # "last seen update sticks", so inactive slots keep their old values
+        act = np.asarray(active, bool)
+        if sizes is not None:
+            self.sizes = np.where(act, np.asarray(sizes, float), self.sizes)
+        if kappas is not None:
+            self.kappas = np.where(act, np.asarray(kappas, float),
+                                   self.kappas)
+        self._ingest_stacked(d_new, active)
+        self.w = self.w - self._weighted(self._nova_weights())
+        return self.w
+
+
+class StackedAFACDServer(_StackedBufferedServer):
+    buffers_hold_weights = False
+
+    def round(self, updates: Sequence[ClientUpdate]):
+        self._ingest(updates)
+        lr = self.fl.global_lr * self.fl.local_lr
+        self.w = self.w - self._weighted(np.full(self.U, lr / self.U))
+        return self.params
+
+    def round_stacked(self, d_new, active) -> jnp.ndarray:
+        self._ingest_stacked(d_new, active)
+        lr = self.fl.global_lr * self.fl.local_lr
+        self.w = self.w - self._weighted(np.full(self.U, lr / self.U))
+        return self.w
+
+
+class StackedFedDiscoServer(_StackedBufferedServer):
+    def _disco_weights(self) -> np.ndarray:
+        p = self.sizes / self.sizes.sum()
+        disco = np.zeros(self.U)
+        if self.hists is not None:
+            h = self.hists
+            uniform = np.full_like(h, 1.0 / h.shape[1])
+            disco = np.where(self.has_hist,
+                             np.linalg.norm(h - uniform, axis=1), 0.0)
+        alpha = np.maximum(p - self.fl.feddisco_a * disco
+                           + self.fl.feddisco_b, 0.0)
+        return alpha / max(alpha.sum(), 1e-12)
+
+    def round(self, updates: Sequence[ClientUpdate]):
+        self._ingest(updates)
+        self.w = self._weighted(self._disco_weights())
+        return self.params
+
+    def round_stacked(self, d_new, active, sizes=None, hists=None):
+        act = np.asarray(active, bool)
+        if sizes is not None:
+            self.sizes = np.where(act, np.asarray(sizes, float), self.sizes)
+        if hists is not None:
+            hists = np.asarray(hists, float)
+            if self.hists is None:
+                self.hists = np.zeros_like(hists)
+            self.hists = np.where(act[:, None], hists, self.hists)
+            self.has_hist |= act
+        self._ingest_stacked(d_new, active)
+        self.w = self._weighted(self._disco_weights())
+        return self.w
+
+
+STACKED_SERVERS = {
+    "fedavg": StackedFedAvgServer,
+    "fedprox": StackedFedProxServer,
+    "fednova": StackedFedNovaServer,
+    "afa_cd": StackedAFACDServer,
+    "feddisco": StackedFedDiscoServer,
+}
+
 SERVERS = {
     "fedavg": FedAvgServer,
     "fedprox": FedProxServer,
@@ -137,7 +308,12 @@ SERVERS = {
 
 
 def make_server(params, fl: FLConfig, num_clients: int, seed: int = 0):
-    from repro.core.osafl import OSAFLServer
+    from repro.core.osafl import OSAFLServer, StackedOSAFLServer
+    if fl.engine == "stacked":
+        if fl.algorithm == "osafl":
+            return StackedOSAFLServer(params, fl, num_clients, seed=seed)
+        return STACKED_SERVERS[fl.algorithm](params, fl, num_clients,
+                                             seed=seed)
     if fl.algorithm == "osafl":
         return OSAFLServer(params, fl, num_clients, seed=seed)
     return SERVERS[fl.algorithm](params, fl, num_clients, seed=seed)

@@ -41,3 +41,37 @@ def local_train(global_params, grad_fn: Callable, buffer: OnlineBuffer,
                            global_params=global_params if prox_mu else None)
     d = tree_scale(tree_sub(global_params, params), 1.0 / (lr * kappa))
     return d, params
+
+
+def make_vmapped_local_train(grad_fn: Callable, lr: float, kappa_max: int,
+                             prox_mu: float = 0.0) -> Callable:
+    """Vectorized local training for the stacked engine: every client runs its
+    kappa_u local SGD steps in lockstep under one ``jax.vmap``, so a whole
+    cohort trains in a single XLA computation instead of U Python loops.
+
+    Returns a jitted ``fn(global_params, batches, kappas) -> (d, w)`` where
+    ``batches`` is a pytree with leaves of shape (U, kappa_max, B, ...),
+    ``kappas`` is (U,) int with values in [0, kappa_max] (steps past kappa_u
+    are masked no-ops; kappa_u == 0 — a straggler — yields d_u = 0), and the
+    outputs are stacked pytrees with a leading client axis. Semantics match
+    ``local_train`` step-for-step on the same batch sequence.
+    """
+
+    def one_client(global_params, batch_u, kappa_u):
+        def body(params, inp):
+            batch_t, t = inp
+            stepped = _sgd_step(
+                params, batch_t, lr, grad_fn, prox_mu=prox_mu,
+                global_params=global_params if prox_mu else None)
+            params = jax.tree.map(
+                lambda n, o: jnp.where(t < kappa_u, n, o), stepped, params)
+            return params, None
+
+        steps = jnp.arange(kappa_max)
+        params, _ = jax.lax.scan(body, global_params, (batch_u, steps))
+        denom = lr * jnp.maximum(kappa_u, 1).astype(jnp.float32)
+        d = jax.tree.map(lambda w0, w: (w0 - w) / denom,
+                         global_params, params)
+        return d, params
+
+    return jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0)))

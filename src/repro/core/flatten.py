@@ -1,0 +1,79 @@
+"""Ravel/unravel codec between parameter pytrees and flat (N,) vectors.
+
+The stacked-client engine keeps every client's contribution as one row of a
+single (U, N) float32 buffer, so the whole server round (write-back, mean,
+scores, scored SGD step) is dense linear algebra instead of O(U) Python tree
+traversals. This module owns the only place where pytree structure meets the
+flat representation: ``make_codec(params)`` freezes the treedef / leaf shapes
+/ leaf dtypes of a parameter template and returns jit-traceable ``flatten`` /
+``unflatten`` closures plus their vmapped stacked counterparts.
+
+Flat vectors are always float32 (scores and SGD accumulation are f32 in the
+loop engine too — see core/scores.py); ``unflatten`` casts each leaf back to
+its template dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FlatCodec:
+    """Bijection between one pytree layout and flat f32 vectors of length n."""
+    n: int
+    treedef: object
+    shapes: Tuple[tuple, ...]
+    dtypes: Tuple[object, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+
+    def flatten(self, tree) -> jnp.ndarray:
+        """Pytree (matching the template treedef) -> (n,) float32."""
+        leaves = jax.tree.leaves(tree)
+        return jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+    def unflatten(self, vec: jnp.ndarray):
+        """(n,) vector -> pytree with the template shapes/dtypes."""
+        leaves = [vec[o:o + s].reshape(sh).astype(dt)
+                  for o, s, sh, dt in zip(self.offsets, self.sizes,
+                                          self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def flatten_stacked(self, stacked_tree) -> jnp.ndarray:
+        """Pytree whose leaves carry a leading client axis -> (U, n) f32."""
+        return jax.vmap(self.flatten)(stacked_tree)
+
+    def unflatten_stacked(self, mat: jnp.ndarray):
+        """(U, n) -> pytree with leaves (U, *leaf_shape)."""
+        return jax.vmap(self.unflatten)(mat)
+
+
+def scatter_updates(codec: FlatCodec, updates, num_clients: int):
+    """Scatter a sparse list of client updates into a dense (U, n) float32
+    matrix + participation mask. Each update needs `.uid` and `.d`, where
+    `.d` is either a pytree matching the codec template or an already-flat
+    (n,) row. Shared by every stacked server's sparse-round entry point."""
+    active = np.zeros(num_clients, bool)
+    d_new = np.zeros((num_clients, codec.n), np.float32)
+    for up in updates:
+        row = (up.d if getattr(up.d, "ndim", None) == 1
+               else codec.flatten(up.d))
+        d_new[up.uid] = np.asarray(row, np.float32)
+        active[up.uid] = True
+    return d_new, active
+
+
+def make_codec(template) -> FlatCodec:
+    leaves, treedef = jax.tree.flatten(template)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.asarray(l).dtype for l in leaves)
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1 for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    return FlatCodec(n=int(sum(sizes)), treedef=treedef, shapes=shapes,
+                     dtypes=dtypes, offsets=offsets, sizes=sizes)

@@ -17,9 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
+from repro.core.flatten import FlatCodec, make_codec, scatter_updates
 from repro.core.scores import (lambda_scores, lambda_scores_sketched,
-                               sketch_tree, tree_add, tree_scale, tree_sub,
-                               tree_zeros_like)
+                               sketch_stacked, sketch_tree, tree_add,
+                               tree_scale, tree_sub, tree_zeros_like)
 
 
 @dataclass
@@ -84,4 +85,99 @@ class OSAFLServer:
             step = tree_add(step, tree_scale(self.d_buffer[u], w))
         lr = fl.global_lr * fl.local_lr
         self.params = tree_sub(self.params, tree_scale(step, lr))
+        return self.params
+
+
+class StackedOSAFLServer:
+    """Vectorized Algorithm 2: the same semantics as ``OSAFLServer`` (which is
+    kept as the exact-parity reference), but every client's contribution is a
+    row of one (U, N) float32 buffer and the whole round — buffer write-back,
+    never-participated refresh, scores, scored SGD step — is a single jitted
+    function. Scoring routes through the fused Pallas kernel
+    ``kernels/scored_reduce.py`` (``fl.score_backend="kernel"``, interpret
+    mode on CPU) or the pure-jnp oracle ``kernels/ref.py``
+    (``fl.score_backend="reference"``).
+
+    Two entry points:
+      * ``round(updates)`` — drop-in for the loop server: a sparse list of
+        ``ClientUpdate`` pytrees (or pre-flattened (N,) rows) is scattered
+        into the dense buffer.
+      * ``round_stacked(d_new, active)`` — the scale path: a dense (U, N)
+        update matrix (e.g. from ``client.make_vmapped_local_train``) plus a
+        participation mask, with no per-client Python work at all.
+    """
+
+    def __init__(self, params, fl: FLConfig, num_clients: int,
+                 alphas: Optional[np.ndarray] = None, seed: int = 0):
+        self.fl = fl
+        self.U = num_clients
+        self.codec: FlatCodec = make_codec(params)
+        self.alphas = jnp.asarray(
+            np.full(num_clients, 1.0 / num_clients) if alphas is None
+            else alphas, jnp.float32)
+        self.w = self.codec.flatten(params)
+        init_row = (self.w / fl.local_lr if fl.literal_init_buffer
+                    else jnp.zeros_like(self.w))
+        self.d_buffer = jnp.tile(init_row[None, :], (num_clients, 1))
+        self.participated = jnp.zeros(num_clients, bool)
+        self.last_scores = np.ones(num_clients)
+        self._lam_prev = jnp.ones(num_clients, jnp.float32)
+        self._sketch_key = jax.random.PRNGKey(seed)
+        self._round_fn = jax.jit(self._build_round())
+
+    @property
+    def params(self):
+        return self.codec.unflatten(self.w)
+
+    def _build_round(self):
+        fl = self.fl
+        from repro.kernels.ops import _interpret
+        from repro.kernels.ref import scored_reduce_reference
+        from repro.kernels.scored_reduce import scored_reduce
+        interpret = _interpret()
+
+        def rnd(w, buf, part_prev, lam_prev, d_new, active, alphas, key):
+            part = part_prev | active
+            buf = jnp.where(active[:, None], d_new, buf)
+            # Algorithm 2 line 17: refresh never-participated slots
+            refresh = (w / fl.local_lr if fl.literal_init_buffer
+                       else jnp.zeros_like(w))
+            buf = jnp.where(part[:, None], buf, refresh[None, :])
+            if fl.score_sketch_dim:
+                sk = sketch_stacked(buf, key, fl.score_sketch_dim)
+                mean = jnp.mean(sk, axis=0)
+                dots = sk @ mean
+                norms = jnp.sum(sk * sk, axis=1)
+                msq = jnp.sum(mean * mean)
+            else:
+                mean = jnp.mean(buf, axis=0)
+                if fl.score_backend == "kernel":
+                    dots, norms, msq = scored_reduce(buf, mean,
+                                                     interpret=interpret)
+                else:
+                    dots, norms, msq = scored_reduce_reference(buf, mean)
+            cos = dots / jnp.maximum(jnp.sqrt(norms) * jnp.sqrt(msq), 1e-12)
+            lam = (fl.chi + cos) / (fl.chi + 1.0)
+            # stale_scores: weight THIS round's buffer with the PREVIOUS
+            # round's scores (single-pass pod engine semantics)
+            lam_use = lam_prev if fl.stale_scores else lam
+            step = (alphas * lam_use) @ buf
+            w = w - fl.global_lr * fl.local_lr * step
+            return w, buf, part, lam_use, lam
+
+        return rnd
+
+    def round_stacked(self, d_new: jnp.ndarray, active) -> jnp.ndarray:
+        """d_new: (U, N) f32 update matrix; active: (U,) bool mask. Returns
+        the new flat global weights (use ``.params`` for the pytree view)."""
+        (self.w, self.d_buffer, self.participated, lam_use,
+         self._lam_prev) = self._round_fn(
+            self.w, self.d_buffer, self.participated, self._lam_prev,
+            d_new, jnp.asarray(active), self.alphas, self._sketch_key)
+        self.last_scores = np.asarray(lam_use)
+        return self.w
+
+    def round(self, updates: Sequence[ClientUpdate]) -> dict:
+        d_new, active = scatter_updates(self.codec, updates, self.U)
+        self.round_stacked(jnp.asarray(d_new), active)
         return self.params

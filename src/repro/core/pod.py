@@ -28,10 +28,32 @@ import math
 from functools import partial
 from typing import Callable, Optional
 
+import inspect
+
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+try:                                    # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+_SM_KWARGS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """Version-compatible shard_map: new API takes axis_names/check_vma, the
+    0.4.x experimental API takes check_rep (replication checks off in both —
+    the scored all-reduce emits unreplicated per-client scalars)."""
+    if "check_vma" in _SM_KWARGS:
+        kw = dict(check_vma=False)
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
 
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.scores import (sketch_tree, tree_add, tree_dot, tree_norm,
@@ -121,8 +143,8 @@ def make_tp_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
                      {k: P() for k in ("loss", "lambda_mean", "lambda_min",
                                        "lambda_max")})
         return shard_map(step_body, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, axis_names=set(axes),
-                         check_vma=False)(params, batch)
+                         out_specs=out_specs,
+                         axis_names=set(axes))(params, batch)
     return step
 
 

@@ -79,3 +79,17 @@ def lambda_scores_sketched(sketches: jnp.ndarray, chi: float = 1.0
     norms = jnp.linalg.norm(sketches, axis=1) * jnp.linalg.norm(mean)
     cos = dots / jnp.maximum(norms, 1e-12)
     return np.asarray((chi + cos) / (chi + 1.0))
+
+
+def sketch_stacked(mat: jnp.ndarray, key, k: int) -> jnp.ndarray:
+    """Count-sketch every row of a stacked (U, N) update matrix at once:
+    the single-leaf specialization of ``sketch_tree`` (same fold_in(key, 0)
+    sign stream), vectorized over clients. Returns (U, k)."""
+    U, N = mat.shape
+    lk = jax.random.fold_in(key, 0)
+    pad = (-N) % k
+    m = mat.astype(jnp.float32)
+    if pad:
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+    signs = jax.random.rademacher(lk, (N + pad,), jnp.float32)
+    return jnp.sum((m * signs).reshape(U, -1, k), axis=1)

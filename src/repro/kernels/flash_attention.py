@@ -36,10 +36,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len,
 
     def body(kj, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(kj * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(kj * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
+        # leading axis via dslice(0, 1): a bare int mixed with Slice indices
+        # breaks pl.load on jax 0.4.x
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(kj * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(kj * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
         s = q @ k.T                                            # (bq, bk)
         if causal:
             k_pos = kj * block_k + jax.lax.iota(jnp.int32, block_k)

@@ -9,8 +9,10 @@ pass over HBM computes everything the score needs:
 
 Naively this is three separate O(U*N) reductions reading d twice and mean
 twice; the fused kernel streams each operand exactly once through VMEM
-(block (U, BLOCK_N)) and accumulates in the (sequential) grid dimension.
-On CPU it is validated with interpret=True against kernels/ref.py.
+(block (BLOCK_U, BLOCK_N)) and accumulates along the sequential N grid
+dimension; the client dimension is blocked too, so thousand-client cohorts
+stay within the ~16 MiB VMEM budget when compiled. On CPU it is validated
+with interpret=True against kernels/ref.py.
 """
 from __future__ import annotations
 
@@ -20,56 +22,74 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK_N = 2048
+DEFAULT_BLOCK_N = 2048          # compiled TPU path: (block_u, block_n) f32
+DEFAULT_BLOCK_U = 512           # in VMEM: 512 * 2048 * 4B = 4 MiB
+INTERPRET_BLOCK_N = 512 * 1024  # interpret mode runs the grid loop at Python
+                                # speed, so large blocks (few grid steps) are
+                                # ~30x faster on CPU and VMEM doesn't apply
 
 
 def _scored_kernel(d_ref, mean_ref, dots_ref, norms_ref, msq_ref):
-    i = pl.program_id(0)
-    d = d_ref[...].astype(jnp.float32)          # (U, bn)
+    u = pl.program_id(0)                        # client-block (parallel)
+    i = pl.program_id(1)                        # N-block (sequential accum)
+    d = d_ref[...].astype(jnp.float32)          # (bu, bn)
     m = mean_ref[...].astype(jnp.float32)       # (1, bn)
 
     @pl.when(i == 0)
     def _init():
         dots_ref[...] = jnp.zeros_like(dots_ref)
         norms_ref[...] = jnp.zeros_like(norms_ref)
+
+    @pl.when((u == 0) & (i == 0))
+    def _init_msq():
         msq_ref[...] = jnp.zeros_like(msq_ref)
 
     dots_ref[...] += jnp.sum(d * m, axis=1, keepdims=True)
     norms_ref[...] += jnp.sum(d * d, axis=1, keepdims=True)
-    msq_ref[...] += jnp.sum(m * m, axis=1, keepdims=True)
+
+    @pl.when(u == 0)                            # count ||mean||^2 once
+    def _msq():
+        msq_ref[...] += jnp.sum(m * m, axis=1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def scored_reduce(d, mean, *, block_n=DEFAULT_BLOCK_N, interpret=True):
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_u", "interpret"))
+def scored_reduce(d, mean, *, block_n=None, block_u=None, interpret=True):
     """d: (U, N); mean: (N,) -> (dots (U,), norms_sq (U,), mean_sq ())."""
     U, N = d.shape
+    if block_n is None:
+        block_n = INTERPRET_BLOCK_N if interpret else DEFAULT_BLOCK_N
+    if block_u is None:
+        block_u = U if interpret else DEFAULT_BLOCK_U
     block_n = min(block_n, N)
-    pad = (-N) % block_n
-    if pad:
-        d = jnp.pad(d, ((0, 0), (0, pad)))
-        mean = jnp.pad(mean, (0, pad))
-    Np = N + pad
-    grid = (Np // block_n,)
+    block_u = min(block_u, U)
+    pad_n = (-N) % block_n
+    pad_u = (-U) % block_u
+    if pad_n or pad_u:
+        d = jnp.pad(d, ((0, pad_u), (0, pad_n)))   # zero rows: dots/norms 0
+        mean = jnp.pad(mean, (0, pad_n))
+    Up, Np = U + pad_u, N + pad_n
+    grid = (Up // block_u, Np // block_n)
     dots, norms, msq = pl.pallas_call(
         _scored_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((U, block_n), lambda i: (0, i)),
-            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((block_u, block_n), lambda u, i: (u, i)),
+            pl.BlockSpec((1, block_n), lambda u, i: (0, i)),
         ],
         out_specs=[
-            pl.BlockSpec((U, 1), lambda i: (0, 0)),
-            pl.BlockSpec((U, 1), lambda i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_u, 1), lambda u, i: (u, 0)),
+            pl.BlockSpec((block_u, 1), lambda u, i: (u, 0)),
+            pl.BlockSpec((1, 1), lambda u, i: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((U, 1), jnp.float32),
-            jax.ShapeDtypeStruct((U, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Up, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Up, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ],
         interpret=interpret,
     )(d, mean.reshape(1, Np))
-    return dots[:, 0], norms[:, 0], msq[0, 0]
+    return dots[:U, 0], norms[:U, 0], msq[0, 0]
 
 
 def osafl_scores_fused(d, chi: float = 1.0, *, interpret=True):

@@ -171,11 +171,32 @@ def lstm_forward(params, x):
     return _apply_linear(params["head"], h[:, -1])
 
 
+# --- MLP (Dataset-2; beyond-paper) ------------------------------------------
+# Tiny embedding MLP used by the stacked-engine scale tests/benchmarks: same
+# task as the LSTM (last L content ids -> next id) at ~2% of the FLOPs, so
+# thousand-client vectorized cohorts stay CPU-cheap. Not a paper model.
+
+def init_mlp(key):
+    ks = jax.random.split(key, 3)
+    return {"embed": dense_init(ks[0], (NUM_CLASSES, 16)),
+            "l1": _linear(ks[1], SEQ_LEN * 16, 64),
+            "head": _linear(ks[2], 64, NUM_CLASSES)}
+
+
+def mlp_forward(params, x):
+    """x: (B, L) int32 content ids."""
+    h = params["embed"][x.astype(jnp.int32)]
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(_apply_linear(params["l1"], h))
+    return _apply_linear(params["head"], h)
+
+
 REGISTRY = {
     "fcn": (init_fcn, fcn_forward),
     "cnn": (init_cnn, cnn_forward),
     "squeezenet": (init_squeezenet, squeezenet_forward),
     "lstm": (init_lstm, lstm_forward),
+    "mlp": (init_mlp, mlp_forward),
 }
 
 

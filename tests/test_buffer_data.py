@@ -1,7 +1,7 @@
 """FIFO online buffer invariants (hypothesis) + video-caching dataset."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.buffer import OnlineBuffer, binomial_arrivals
 from repro.data.video_caching import (D1_DIM, F_FILES, FILES_PER_GENRE,

@@ -2,7 +2,7 @@
 optimality properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.resource import (FPP, ChannelState, ClientSystem,
                                  NetworkConfig, _comp_coeff, _rate,
