@@ -1,0 +1,142 @@
+"""Online-cohort benchmark: the paper's per-round *online wireless pipeline*
+— Binomial(E_u, p_ac) FIFO arrivals, the joint kappa/f/p resource optimizer,
+and the scored OSAFL aggregation round — loop (per-client NumPy/pytree
+oracles) vs the vectorized stacked implementations, at U = 256 on CPU.
+
+Two measurements:
+
+  * pipeline: arrivals ingest (stage + FIFO commit) + resource optimization
+    + server round on a fixed synthetic update matrix. This isolates exactly
+    the components this pipeline vectorizes (local SGD is identical compute
+    in both engines and is benchmarked by ``bench_stacked.py``). Acceptance
+    target: >= 10x at U = 256.
+  * full harness: end-to-end ``run_experiment`` vs
+    ``run_vectorized_experiment`` steady-state round time (includes local
+    training and the per-client Python request streams both harnesses
+    share), from the in-harness ``round_s`` history field with the first
+    (compile-bearing) round dropped.
+
+Usage: PYTHONPATH=src python benchmarks/bench_online.py [U] [rounds]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import (ExperimentConfig, run_experiment,
+                                   run_vectorized_experiment)
+except ModuleNotFoundError:      # executed as a script from benchmarks/
+    from common import (ExperimentConfig, run_experiment,
+                        run_vectorized_experiment)
+
+from repro.configs.base import FLConfig
+from repro.core.buffer import OnlineBuffer, binomial_arrivals
+from repro.core.buffer_stacked import StackedOnlineBuffer
+from repro.core.osafl import ClientUpdate, OSAFLServer, StackedOSAFLServer
+from repro.core.resource import NetworkConfig, make_clients, optimize_round
+from repro.core.resource_stacked import optimize_round_batched, stack_clients
+from repro.data.online import binomial_arrivals_batched
+from repro.models.small import init_small
+
+
+def bench_pipeline(U: int = 256, rounds: int = 5, n_params: int = 18_000,
+                   e_u: int = 8, seed: int = 0) -> dict:
+    """Per-round online pipeline: arrivals + optimizer + OSAFL round."""
+    rng = np.random.default_rng(seed)
+    net = NetworkConfig()
+    clients = make_clients(rng, U)
+    sysb = stack_clients(clients)
+    caps = rng.integers(80, 160, size=U)
+    feat = (10,)
+    bufs = [OnlineBuffer.create(int(c), feat, 100, dtype=np.int64)
+            for c in caps]
+    for b, c in zip(bufs, caps):
+        b.stage(np.zeros((c, 10), np.int64), np.zeros(c, np.int64))
+        b.commit()
+    sbuf = StackedOnlineBuffer.create(caps, feat, 100,
+                                      stage_capacity=int(caps.max()),
+                                      dtype=np.int64)
+    sbuf.stage(np.zeros((U, int(caps.max()), 10), np.int64),
+               np.zeros((U, int(caps.max())), np.int64), caps)
+    sbuf.commit()
+    p_ac = rng.uniform(0.3, 0.8, U)
+    params = init_small(jax.random.PRNGKey(seed), "mlp")
+    fl = FLConfig(num_clients=U, local_lr=0.1, global_lr=16.0)
+    loop_srv = OSAFLServer(params, fl, U)
+    st_srv = StackedOSAFLServer(params, fl, U)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), U)
+    upds = [ClientUpdate(u, jax.tree.map(
+        lambda p, k=k: jax.random.normal(k, p.shape), params), kappa=5)
+        for u, k in enumerate(keys)]
+    d_new = st_srv.codec.flatten_stacked(
+        jax.tree.map(lambda *xs: jnp.stack(xs), *[u.d for u in upds]))
+    active = np.ones(U, bool)
+    ax = np.zeros((U, e_u, 10), np.int64)
+    ay = np.zeros((U, e_u), np.int64)
+
+    def loop_round():
+        for c in range(U):
+            n = binomial_arrivals(rng, e_u, p_ac[c])
+            if n:
+                bufs[c].stage(ax[c, :n], ay[c, :n])
+            bufs[c].commit()
+        optimize_round(rng, net, clients, n_params)
+        loop_srv.round(upds)
+        jax.block_until_ready(jax.tree.leaves(loop_srv.params))
+
+    def vec_round():
+        counts = binomial_arrivals_batched(rng, e_u, p_ac)
+        sbuf.stage(ax, ay, counts)
+        sbuf.commit()
+        optimize_round_batched(rng, net, sysb, n_params)
+        st_srv.round_stacked(d_new, active)
+        jax.block_until_ready(st_srv.w)
+
+    loop_round()
+    vec_round()                                   # warm dispatch + compile
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        loop_round()
+    t_loop = (time.perf_counter() - t0) / rounds
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        vec_round()
+    t_vec = (time.perf_counter() - t0) / rounds
+    return {"U": U, "loop_s": t_loop, "vec_s": t_vec,
+            "speedup": t_loop / t_vec}
+
+
+def bench_harness(U: int = 256, rounds: int = 3, model: str = "mlp",
+                  dataset: int = 2, seed: int = 0) -> dict:
+    """End-to-end harness rounds: mean in-harness ``round_s`` over the
+    steady-state rounds (the first round pays jit compilation and is
+    dropped)."""
+    xc = ExperimentConfig(model=model, dataset=dataset, num_clients=U,
+                          rounds=1 + rounds, seed=seed)
+    t_vec = float(np.mean([h["round_s"] for h in
+                           run_vectorized_experiment("osafl", xc)[1:]]))
+    t_loop = float(np.mean([h["round_s"] for h in
+                            run_experiment("osafl", xc)[1:]]))
+    return {"U": U, "rounds": rounds, "model": model, "loop_s": t_loop,
+            "vec_s": t_vec, "speedup": t_loop / t_vec}
+
+
+if __name__ == "__main__":
+    U = int(sys.argv[1]) if len(sys.argv) > 1 else 256
+    rounds = int(sys.argv[2]) if len(sys.argv) > 2 else 3
+    p = bench_pipeline(U, max(rounds, 3))
+    print(f"U={U} online pipeline (arrivals+optimizer+OSAFL round): "
+          f"loop {p['loop_s']*1e3:.0f} ms vs vectorized "
+          f"{p['vec_s']*1e3:.1f} ms -> {p['speedup']:.1f}x")
+    h = bench_harness(U, rounds)
+    print(f"U={U} full harness round (incl. shared local SGD + Python "
+          f"request streams): loop {h['loop_s']*1e3:.0f} ms vs vectorized "
+          f"{h['vec_s']*1e3:.1f} ms -> {h['speedup']:.1f}x")
+    if p["speedup"] < 10:
+        raise SystemExit("FAIL: vectorized online pipeline speedup < 10x")
+    print("PASS: pipeline >= 10x")

@@ -12,10 +12,14 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core.baselines import make_server
 from repro.core.buffer import OnlineBuffer, binomial_arrivals
+from repro.core.buffer_stacked import StackedOnlineBuffer
 from repro.core.client import local_train, make_vmapped_local_train
 from repro.core.osafl import ClientUpdate
 from repro.core.resource import (NetworkConfig, make_clients, optimize_round)
-from repro.data.video_caching import D1_DIM, make_population
+from repro.core.resource_stacked import optimize_round_batched, stack_clients
+from repro.data.online import (binomial_arrivals_batched, dataset_layout,
+                               draw_arrival_batch, pad_arrival_batch)
+from repro.data.video_caching import make_population
 from repro.models.small import REGISTRY, init_small, small_loss
 
 MODEL_PARAMS = {"fcn": 3_900_000, "cnn": 1_100_000, "squeezenet": 740_000,
@@ -50,8 +54,7 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400):
     model = xc.model
     cat, streams = make_population(xc.seed, xc.num_clients, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)
-    feat_shape = (D1_DIM,) if xc.dataset == 1 else (10,)
-    dtype = np.float32 if xc.dataset == 1 else np.int64
+    feat_shape, dtype = dataset_layout(xc.dataset)
     bufs = []
     for s in streams:
         cap = int(rng.integers(*xc.capacity))
@@ -82,6 +85,7 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400):
 
     history = []
     for t in range(xc.rounds):
+        t_start = time.perf_counter()
         if xc.use_resource_opt:
             decisions = optimize_round(rng, net, clients_sys, n_params)
         updates = []
@@ -106,30 +110,41 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400):
         loss, m = small_loss(server.params, test_batch, model)
         history.append({"round": t, "test_loss": float(loss),
                         "test_acc": float(m["accuracy"]),
-                        "participants": len(updates)})
+                        "participants": len(updates),
+                        "round_s": time.perf_counter() - t_start})
     return history
 
 
 def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
                               eval_samples: int = 400):
     """Stacked-engine counterpart of ``run_experiment``: the whole cohort
-    trains under one ``jax.vmap`` and the server round is one vectorized
-    (U, N)-buffer update, so ``xc.num_clients`` can be hundreds to thousands.
-
-    Scale-harness simplifications vs the paper-faithful loop harness
-    (recorded in EXPERIMENTS.md): every client holds a fixed-size stationary
-    dataset of ``capacity[0]`` samples (drawn once — no FIFO arrivals), and
-    round participation is Bernoulli(p_ac) with kappa ~ Uniform{1..kappa_max}
-    instead of the per-client numpy resource optimizer.
+    trains under one ``jax.vmap``, the server round is one vectorized
+    (U, N)-buffer update, and the paper's full *online* setting runs in
+    stacked form too — per-client FIFO buffers with Binomial(E_u, p_ac)
+    arrivals (``StackedOnlineBuffer``, committed at round boundaries as one
+    jitted scatter) and the joint kappa/f/p resource optimizer
+    (``resource_stacked``, all clients in one jitted f64 solve). So
+    ``xc.num_clients`` can be hundreds to thousands with no loss of paper
+    fidelity; only the request streams themselves stay per-client Python.
     """
     model = xc.model
     U = xc.num_clients
     cat, streams = make_population(xc.seed, U, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)
-    cap = xc.capacity[0]
-    data = [_draw(s, cap, xc.dataset) for s in streams]
-    data_x = np.stack([d[0] for d in data])           # (U, cap, ...)
-    data_y = np.stack([d[1] for d in data])           # (U, cap)
+    feat_shape, dtype = dataset_layout(xc.dataset)
+    lo, hi = xc.capacity
+    caps = rng.integers(lo, max(hi, lo + 1), size=U)
+    sbuf = StackedOnlineBuffer.create(
+        caps, feat_shape, 100, stage_capacity=xc.arrivals, dtype=dtype)
+    # initial fill: FIFO commits compose, so ingest the cap_u seed samples
+    # in arrival-width chunks rather than sizing the staging area (kept for
+    # the whole run) for caps.max()
+    init = [_draw(s, int(c), xc.dataset) for s, c in zip(streams, caps)]
+    for off in range(0, int(caps.max()), xc.arrivals):
+        chunk = [(x[off:off + xc.arrivals], y[off:off + xc.arrivals])
+                 if off < len(y) else None for x, y in init]
+        sbuf.stage(*pad_arrival_batch(chunk, xc.arrivals, xc.dataset))
+        sbuf.commit()
     p_ac = np.array([s.user.p_ac for s in streams])
 
     per = max(eval_samples // U, 4)
@@ -148,35 +163,45 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     local_step = make_vmapped_local_train(
         grad_fn, fl.local_lr, fl.kappa_max,
         prox_mu=fl.fedprox_mu if alg == "fedprox" else 0.0)
-    if alg == "feddisco":
-        hists = np.stack([np.bincount(y, minlength=100) / len(y)
-                          for y in data_y])
     weights_alg = alg in ("fedavg", "fedprox", "feddisco")
+
+    net = NetworkConfig()
+    sysb = stack_clients(make_clients(rng, U,
+                                      cell_radius_m=xc.cell_radius_m))
+    n_params = MODEL_PARAMS.get(model, 1_000_000)
 
     history = []
     for t in range(xc.rounds):
-        active = rng.random(U) < p_ac
-        kappas = np.where(active, rng.integers(1, fl.kappa_max + 1, U), 0)
-        idx = rng.integers(0, cap, (U, fl.kappa_max, xc.batch))
-        batches = {
-            "x": jnp.asarray(data_x[np.arange(U)[:, None, None], idx]),
-            "y": jnp.asarray(data_y[np.arange(U)[:, None, None], idx])}
-        d, w = local_step(server.params, batches, jnp.asarray(kappas))
+        t_start = time.perf_counter()
+        counts = binomial_arrivals_batched(rng, xc.arrivals, p_ac)
+        sbuf.stage(*draw_arrival_batch(streams, counts, xc.dataset,
+                                       width=xc.arrivals))
+        sbuf.commit()
+        if xc.use_resource_opt:
+            dec = optimize_round_batched(rng, net, sysb, n_params)
+            kappas = dec.kappa
+        else:
+            kappas = np.full(U, fl.kappa_max)
+        active = kappas >= 1                    # kappa = 0 => straggler
+        slots = sbuf.sample_slots(rng, (fl.kappa_max, xc.batch))
+        d, w = local_step(server.params, sbuf.gather(slots),
+                          jnp.asarray(kappas))
         upd = codec.flatten_stacked(w if weights_alg else d)
         if alg == "fednova":
             # round_stacked merges sizes/kappas for active clients only, so
             # stragglers keep their last-seen kappa (loop meta semantics)
-            server.round_stacked(upd, active, sizes=np.full(U, cap),
+            server.round_stacked(upd, active, sizes=sbuf.sizes,
                                  kappas=kappas)
         elif alg == "feddisco":
-            server.round_stacked(upd, active, sizes=np.full(U, cap),
-                                 hists=hists)
+            server.round_stacked(upd, active, sizes=sbuf.sizes,
+                                 hists=sbuf.label_histograms())
         else:
             server.round_stacked(upd, active)
         loss, m = small_loss(server.params, test_batch, model)
         history.append({"round": t, "test_loss": float(loss),
                         "test_acc": float(m["accuracy"]),
-                        "participants": int(active.sum())})
+                        "participants": int(active.sum()),
+                        "round_s": time.perf_counter() - t_start})
     return history
 
 
@@ -185,8 +210,7 @@ def run_centralized_sgd(xc: ExperimentConfig, eval_samples: int = 400):
     model = xc.model
     cat, streams = make_population(xc.seed, xc.num_clients, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)
-    feat_shape = (D1_DIM,) if xc.dataset == 1 else (10,)
-    dtype = np.float32 if xc.dataset == 1 else np.int64
+    feat_shape, dtype = dataset_layout(xc.dataset)
     bufs = []
     for s in streams:
         cap = int(rng.integers(*xc.capacity))

@@ -2,8 +2,15 @@ from repro.core.osafl import ClientUpdate, OSAFLServer, StackedOSAFLServer
 from repro.core.baselines import make_server
 from repro.core.client import local_train, make_vmapped_local_train
 from repro.core.buffer import OnlineBuffer, binomial_arrivals
+from repro.core.buffer_stacked import StackedOnlineBuffer
 from repro.core.flatten import FlatCodec, make_codec
+from repro.core.resource_stacked import (ClientSystemBatch,
+                                         optimize_clients_batched,
+                                         optimize_round_batched,
+                                         sample_channels, stack_clients)
 
 __all__ = ["ClientUpdate", "OSAFLServer", "StackedOSAFLServer", "make_server",
            "local_train", "make_vmapped_local_train", "OnlineBuffer",
-           "binomial_arrivals", "FlatCodec", "make_codec"]
+           "binomial_arrivals", "StackedOnlineBuffer", "FlatCodec",
+           "make_codec", "ClientSystemBatch", "optimize_clients_batched",
+           "optimize_round_batched", "sample_channels", "stack_clients"]

@@ -1,0 +1,189 @@
+"""Stacked time-varying FIFO client datasets (paper Section II-A, vectorized).
+
+All U clients' bounded datasets live in one ``(U, D, ...)`` device array
+(D = max capacity) with per-client capacity/head/size pointer arrays.
+Arrivals are staged during the round and applied FIFO at the round boundary
+by one jitted scatter — the closed form of ``core/buffer.py``'s sequential
+``_insert`` loop:
+
+  * staged sample j lands in slot ``(head + size + j) mod cap``;
+  * of an over-capacity commit only the last ``cap`` staged samples survive
+    (earlier ones would be immediately overwritten), so the rest are dropped
+    before the scatter and no slot is written twice;
+  * ``size`` grows to ``min(size + n, cap)`` and ``head`` advances by the
+    overflow ``max(size + n - cap, 0)``.
+
+``core/buffer.py`` remains the semantic oracle: the stacked state (dataset
+contents in FIFO order, size, label histogram) must match it exactly over
+multi-round runs including wrap-around (tests/test_online_stacked.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class BufState(NamedTuple):
+    """Device-array state of all U buffers (a pytree for the jitted ops)."""
+    x: jnp.ndarray          # (U, D, *feat) feature storage
+    y: jnp.ndarray          # (U, D) labels
+    cap: jnp.ndarray        # (U,) int32 per-client capacity D_u (immutable)
+    size: jnp.ndarray      # (U,) int32
+    head: jnp.ndarray      # (U,) int32 FIFO eviction pointer (oldest sample)
+    staged_x: jnp.ndarray   # (U, S, *feat) within-round temp buffer
+    staged_y: jnp.ndarray   # (U, S)
+    staged_n: jnp.ndarray   # (U,) int32
+
+
+@jax.jit
+def _stage(state: BufState, x_new, y_new, counts) -> BufState:
+    """Append ``counts[u]`` of client u's padded arrival rows to its staged
+    buffer. Rows beyond counts[u] are padding and are dropped via an
+    out-of-range scatter index."""
+    U, S = state.staged_y.shape
+    j = jnp.arange(x_new.shape[1], dtype=jnp.int32)
+    pos = state.staged_n[:, None] + j[None, :]
+    pos = jnp.where(j[None, :] < counts[:, None], pos, S)
+    uu = jnp.arange(U, dtype=jnp.int32)[:, None]
+    return state._replace(
+        staged_x=state.staged_x.at[uu, pos].set(x_new, mode="drop"),
+        staged_y=state.staged_y.at[uu, pos].set(y_new, mode="drop"),
+        staged_n=state.staged_n + counts.astype(state.staged_n.dtype))
+
+
+@jax.jit
+def _commit(state: BufState) -> BufState:
+    """Apply all staged arrivals FIFO at the round boundary (one scatter)."""
+    U, S = state.staged_y.shape
+    D = state.y.shape[1]
+    n, c, h, s = state.staged_n, state.cap, state.head, state.size
+    j = jnp.arange(S, dtype=jnp.int32)
+    # keep only the last cap staged samples; they land in distinct slots
+    keep = (j[None, :] < n[:, None]) & (j[None, :] >= (n - c)[:, None])
+    slot = ((h + s)[:, None] + j[None, :]) % c[:, None]
+    slot = jnp.where(keep, slot, D)
+    uu = jnp.arange(U, dtype=jnp.int32)[:, None]
+    return state._replace(
+        x=state.x.at[uu, slot].set(state.staged_x, mode="drop"),
+        y=state.y.at[uu, slot].set(state.staged_y, mode="drop"),
+        size=jnp.minimum(s + n, c),
+        head=(h + jnp.maximum(s + n - c, 0)) % c,
+        staged_n=jnp.zeros_like(n))
+
+
+@partial(jax.jit, static_argnums=1)
+def _histograms(state: BufState, num_classes: int) -> jnp.ndarray:
+    """(U, C) normalized label histograms over each client's live window."""
+    D = state.y.shape[1]
+    p = jnp.arange(D, dtype=jnp.int32)[None, :]
+    c, h, s = state.cap[:, None], state.head[:, None], state.size[:, None]
+    live = (p < c) & (((p - h) % c) < s)
+    onehot = jax.nn.one_hot(state.y, num_classes, dtype=jnp.float32)
+    hist = jnp.sum(onehot * live[..., None], axis=1)
+    return hist / jnp.maximum(jnp.sum(hist, axis=1, keepdims=True), 1.0)
+
+
+@dataclass
+class StackedOnlineBuffer:
+    """Vectorized counterpart of ``OnlineBuffer`` for a whole cohort."""
+    state: BufState
+    num_classes: int
+    last_hist: Optional[np.ndarray] = None
+
+    @classmethod
+    def create(cls, capacities, feature_shape: tuple, num_classes: int,
+               stage_capacity: Optional[int] = None, dtype=np.float32,
+               label_dtype=np.int64) -> "StackedOnlineBuffer":
+        caps = np.asarray(capacities, np.int32)
+        U, D = caps.shape[0], int(caps.max())
+        S = int(stage_capacity) if stage_capacity else D
+        feat = tuple(feature_shape)
+        dtype = jax.dtypes.canonicalize_dtype(dtype)
+        label_dtype = jax.dtypes.canonicalize_dtype(label_dtype)
+        state = BufState(
+            x=jnp.zeros((U, D) + feat, dtype),
+            y=jnp.zeros((U, D), label_dtype),
+            cap=jnp.asarray(caps),
+            size=jnp.zeros(U, jnp.int32),
+            head=jnp.zeros(U, jnp.int32),
+            staged_x=jnp.zeros((U, S) + feat, dtype),
+            staged_y=jnp.zeros((U, S), label_dtype),
+            staged_n=jnp.zeros(U, jnp.int32))
+        return cls(state=state, num_classes=num_classes)
+
+    # -- staging (within-round arrivals go to the temp buffer) ---------------
+    def stage(self, x_new, y_new, counts) -> None:
+        """x_new (U, A, *feat) / y_new (U, A) padded rows; counts (U,) valid
+        prefixes. Total staged per client must fit ``stage_capacity``."""
+        counts = np.asarray(counts)
+        S = self.state.staged_y.shape[1]
+        staged = np.asarray(self.state.staged_n) + counts
+        if staged.max(initial=0) > S:
+            raise ValueError(f"staged {int(staged.max())} > stage_capacity "
+                             f"{S}; raise stage_capacity at create()")
+        self.state = _stage(self.state, jnp.asarray(x_new),
+                            jnp.asarray(y_new),
+                            jnp.asarray(counts, jnp.int32))
+
+    def commit(self) -> int:
+        """Apply staged arrivals FIFO. Returns total #ingested (cohort)."""
+        n = int(np.asarray(self.state.staged_n).sum())
+        self.state = _commit(self.state)
+        return n
+
+    # -- views ----------------------------------------------------------------
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.asarray(self.state.size)
+
+    @property
+    def heads(self) -> np.ndarray:
+        return np.asarray(self.state.head)
+
+    @property
+    def capacities(self) -> np.ndarray:
+        return np.asarray(self.state.cap)
+
+    def dataset(self, u: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Client u's live samples in FIFO order (oracle ``dataset()``)."""
+        h, s, c = int(self.heads[u]), int(self.sizes[u]),\
+            int(self.capacities[u])
+        idx = (h + np.arange(s)) % c
+        return (np.asarray(self.state.x[u])[idx],
+                np.asarray(self.state.y[u])[idx])
+
+    def label_histograms(self) -> np.ndarray:
+        return np.asarray(_histograms(self.state, self.num_classes))
+
+    def distribution_shifts(self) -> np.ndarray:
+        """(U,) empirical Phi_u^t proxies (oracle ``distribution_shift``)."""
+        h = self.label_histograms()
+        shift = (np.zeros(h.shape[0]) if self.last_hist is None
+                 else np.sum((h - self.last_hist) ** 2, axis=1))
+        self.last_hist = h
+        return shift
+
+    # -- batch sampling ---------------------------------------------------------
+    def sample_slots(self, rng: np.random.Generator, sample_shape: tuple
+                     ) -> np.ndarray:
+        """(U, *sample_shape) storage slots, uniform over each client's live
+        window (empty buffers fall back to slot head)."""
+        size = np.maximum(self.sizes, 1)
+        U = size.shape[0]
+        lead = (U,) + (1,) * len(sample_shape)
+        j = rng.integers(0, size.reshape(lead),
+                         size=(U,) + tuple(sample_shape))
+        return (self.heads.reshape(lead) + j) % self.capacities.reshape(lead)
+
+    def gather(self, slots: np.ndarray) -> dict:
+        """Device gather of sampled slots -> batch pytree {x, y} with leaves
+        (U, *sample_shape, ...) for the vmapped local trainer."""
+        U = slots.shape[0]
+        uu = np.arange(U).reshape((U,) + (1,) * (slots.ndim - 1))
+        slots = jnp.asarray(slots)
+        return {"x": self.state.x[uu, slots], "y": self.state.y[uu, slots]}

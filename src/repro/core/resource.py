@@ -29,6 +29,19 @@ import numpy as np
 
 FPP = 32  # floating point precision (bits)
 
+# Knife-edge slacks. The alternating solve parks its iterates exactly on two
+# constraint boundaries: Lemma 2's f makes the deadline exactly binding at the
+# current p, so (a) J2 equals kappa *exactly* in exact arithmetic and
+# floor(J2) flips kappa-1 vs kappa on last-ulp rounding, and (b) the SCA's
+# minimum-deadline power p_lo equals the current p exactly, so at p = p_max
+# the p_lo > p_max infeasibility check is a coin flip on float noise. The
+# slacks keep both decisions on the exact-arithmetic side (and deterministic
+# across float implementations — the batched core/resource_stacked.py must
+# match this module exactly); any resulting constraint excess is O(slack)
+# relative, inside the 1e-6 feasibility-check slack.
+_J_SLACK = 1e-7
+_P_SLACK = 1e-9
+
 
 @dataclass
 class ClientSystem:
@@ -70,9 +83,10 @@ class NetworkConfig:
             * self.omega
 
 
-def pathloss_linear(distance_m: float) -> float:
-    """3GPP-style urban path loss at 2.4 GHz: PL(dB)=128.1+37.6 log10(d_km)."""
-    pl_db = 128.1 + 37.6 * np.log10(max(distance_m, 1.0) / 1000.0)
+def pathloss_linear(distance_m) -> float:
+    """3GPP-style urban path loss at 2.4 GHz: PL(dB)=128.1+37.6 log10(d_km).
+    Elementwise — accepts a scalar or an (U,) array of distances."""
+    pl_db = 128.1 + 37.6 * np.log10(np.maximum(distance_m, 1.0) / 1000.0)
     return 10 ** (-pl_db / 10)
 
 
@@ -108,7 +122,7 @@ def optimal_kappa(net, sys, ch, f, p, n_params) -> int:
     t_up = _upload_time(net, ch, p, n_params)
     j1 = (sys.e_bd - e_up) / (0.5 * net.v * cc * f ** 2)
     j2 = f * (net.t_th - t_up) / cc
-    k = min(net.kappa_max, int(np.floor(min(j1, j2))))
+    k = min(net.kappa_max, int(np.floor(min(j1, j2) + _J_SLACK)))
     return max(k, 0)
 
 
@@ -135,8 +149,9 @@ def _sca_power(net, sys, ch, kappa, f, n_params, p0) -> Optional[float]:
         return None
     snr_min = 2.0 ** (Nb / (net.omega * t_left)) - 1.0
     p_lo = snr_min / g
-    if p_lo > sys.p_max:
+    if p_lo > sys.p_max * (1 + _P_SLACK):
         return None
+    p_lo = min(p_lo, sys.p_max)
     p = max(min(p0, sys.p_max), p_lo, 1e-6)
     for _ in range(net.sca_iters):
         ln = np.log1p(g * p)

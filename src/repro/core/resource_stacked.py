@@ -1,0 +1,258 @@
+"""Batched joint resource optimization (paper Section II-C, Appendix B).
+
+Vectorized port of ``core/resource.py``: the same Lemma 1 / Lemma 2 closed
+forms and the interval-endpoint SCA power step, evaluated for all U clients
+at once as elementwise jnp over (U,) arrays. The math is purely elementwise,
+so the port is a broadcast rewrite of the scalar module; the per-client
+NumPy module remains the oracle and this module must agree with it exactly
+on kappa/feasibility and to <= 1e-6 relative on (f, p)
+(tests/test_online_stacked.py).
+
+The solve runs in float64 under a scoped ``jax.experimental.enable_x64``
+context (the repo keeps the global x64 flag off): the SCA's minimum-SNR term
+2^(Nb / (omega * t_left)) overflows float32 under tight deadlines, and the
+parity bar sits far below f32 resolution. Per-client early exits in the
+scalar algorithm (straggler breaks, frequency fallback, SCA convergence)
+become lane masks; iteration counts are the static
+``NetworkConfig.outer_iters`` / ``sca_iters``, so the whole alternating
+solve — all five initial power points of Algorithm 1's sweep — jits to one
+XLA program per network configuration.
+
+Channel sampling is vectorized too, and ``np.random.Generator`` draws are
+stream-equivalent between one size-U array draw and U sequential scalar
+draws, so ``sample_channels`` reproduces the loop path's channels exactly
+for the same generator state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.resource import (_J_SLACK, _P_SLACK, FPP, ClientSystem,
+                                 NetworkConfig, pathloss_linear)
+
+_LN2 = float(np.log(2.0))
+
+
+@dataclass
+class ClientSystemBatch:
+    """Column-stacked ``ClientSystem``: every field an (U,) float64 array."""
+    c: np.ndarray
+    s: np.ndarray
+    f_max: np.ndarray
+    p_max: np.ndarray
+    e_bd: np.ndarray
+    distance: np.ndarray
+
+    def __len__(self) -> int:
+        return self.c.shape[0]
+
+
+def stack_clients(clients: Sequence[ClientSystem]) -> ClientSystemBatch:
+    """Stack a ``make_clients`` population into (U,) field arrays."""
+    cols = {f.name: np.array([getattr(cl, f.name) for cl in clients],
+                             np.float64)
+            for f in dataclasses.fields(ClientSystem)}
+    return ClientSystemBatch(**cols)
+
+
+@dataclass
+class ChannelBatch:
+    """Per-round wireless channels for the whole cohort: (U,) arrays."""
+    xi: np.ndarray
+    gamma: np.ndarray
+
+
+def sample_channels(rng: np.random.Generator, sysb: ClientSystemBatch,
+                    shadow_sigma_db: float = 8.0) -> ChannelBatch:
+    """Whole-cohort ``resource.sample_channel``: one array draw, same stream
+    as U sequential scalar draws from the same generator state."""
+    gamma = 10 ** (rng.normal(0.0, shadow_sigma_db, size=len(sysb)) / 10)
+    return ChannelBatch(xi=pathloss_linear(sysb.distance), gamma=gamma)
+
+
+@dataclass
+class ResourceDecisionBatch:
+    """Column-stacked ``ResourceDecision``; ``kappa`` is 0 for stragglers."""
+    kappa: np.ndarray       # (U,) int64
+    f: np.ndarray           # (U,) float64
+    p: np.ndarray           # (U,) float64
+    feasible: np.ndarray    # (U,) bool
+    t_total: np.ndarray     # (U,) float64
+    e_total: np.ndarray     # (U,) float64
+
+
+@lru_cache(maxsize=8)
+def _make_solver(net_fields: tuple):
+    """Build (and cache) the jitted all-clients solve for one NetworkConfig.
+
+    The returned fn maps (c, s, f_max, p_max, e_bd, xi, gamma, n_params) —
+    all (U,) f64 except the scalar payload — to the six decision columns.
+    Every formula below mirrors the scalar module line-for-line; only the
+    control flow changes (breaks -> lane masks, init-point loop -> vmap).
+    """
+    net = NetworkConfig(*net_fields)
+    noise = net.noise_power
+    fracs = np.array([1.0, 0.1, 0.01, 1e-3, 1e-4])
+    ks = np.arange(1.0, net.kappa_max + 1)          # (K,) candidate kappas
+
+    def solve(c, s, f_max, p_max, e_bd, xi, gamma, n_params):
+        xg = xi * gamma
+        cc = net.n * net.nbar * c * s               # cycles per local round
+        nb = n_params * (FPP + 1)                   # upload payload (bits)
+        g = xg / noise                              # SNR slope: snr = g*p
+
+        def rate(p):
+            return net.omega * jnp.log2(1.0 + xg * p / noise)
+
+        def t_up(p):
+            return nb / jnp.maximum(rate(p), 1e-12)
+
+        def e_up(p):
+            return t_up(p) * p
+
+        def opt_kappa(f, p):
+            """Lemma 1 (eq. 42)."""
+            j1 = (e_bd - e_up(p)) / (0.5 * net.v * cc * f ** 2)
+            j2 = f * (net.t_th - t_up(p)) / cc
+            k = jnp.minimum(float(net.kappa_max),
+                            jnp.floor(jnp.minimum(j1, j2) + _J_SLACK))
+            return jnp.maximum(k, 0.0)
+
+        def opt_freq(kappa, p):
+            """Lemma 2 (eq. 48); inf where upload alone exceeds deadline."""
+            r = rate(p)
+            denom = net.t_th * r - nb
+            val = cc * kappa * r / jnp.where(denom > 0, denom, 1.0)
+            return jnp.where(denom > 0, val, jnp.inf)
+
+        def sca_power(kappa, f, p0):
+            """SCA (eqs. 50-52) with convergence/abort masks per lane."""
+            e_cp = 0.5 * net.v * cc * kappa * f ** 2
+            t_cp = cc * kappa / f
+            t_left = net.t_th - t_cp
+            valid = t_left > 0
+            snr_min = 2.0 ** (nb / (net.omega *
+                                    jnp.where(valid, t_left, 1.0))) - 1.0
+            p_lo = snr_min / g
+            valid &= p_lo <= p_max * (1 + _P_SLACK)
+            p_lo = jnp.where(valid, jnp.minimum(p_lo, p_max), 1e-6)
+            p = jnp.maximum(jnp.maximum(jnp.minimum(p0, p_max), p_lo), 1e-6)
+            done = jnp.zeros(valid.shape, bool)
+            for _ in range(net.sca_iters):
+                act = valid & ~done
+                ln = jnp.log1p(g * p)
+                obj_slope = (net.omega / _LN2) * (g / (p * (1 + g * p))
+                                                  - ln / p ** 2)
+                e_at = nb * _LN2 / net.omega * (p / ln)
+                e_slope = nb * _LN2 / net.omega * (1 / ln - g * p /
+                                                   (ln ** 2 * (1 + g * p)))
+                pos = e_slope > 0
+                p_hi = jnp.where(
+                    pos,
+                    jnp.minimum(p_max, p + (e_bd - e_cp - e_at)
+                                / jnp.where(pos, e_slope, 1.0)),
+                    p_max)
+                bad = p_hi < p_lo - 1e-12
+                valid &= ~(act & bad)
+                act &= ~bad
+                p_new = jnp.clip(jnp.where(obj_slope >= 0, p_hi, p_lo),
+                                 p_lo, p_max)
+                conv = jnp.abs(p_new - p) < net.tol
+                p = jnp.where(act, jnp.where(conv, p_new,
+                                             0.5 * (p + p_new)), p)
+                done |= act & conv
+            ok = valid & (e_up(p) + e_cp <= e_bd * (1 + 1e-6)) \
+                & (t_cp + t_up(p) <= net.t_th * (1 + 1e-6))
+            return p, ok
+
+        def from_point(p0):
+            """Masked ``resource._optimize_from`` over all lanes at once."""
+            f, p = f_max, p0
+            alive = jnp.ones(p0.shape, bool)
+            rk = jnp.zeros_like(p0)
+            rf, rp = f, p
+            rfeas = jnp.zeros(p0.shape, bool)
+            rt = jnp.zeros_like(p0)
+            re_ = jnp.zeros_like(p0)
+            for _ in range(net.outer_iters):
+                kappa = opt_kappa(f, p)
+                alive &= kappa >= 1
+                f_new = opt_freq(kappa, p)
+                good = jnp.isfinite(f_new) & (f_new <= f_max)
+                # deadline infeasible at kappa: largest k2 < kappa that fits
+                f_all = opt_freq(ks[:, None], p[None, :])        # (K, U)
+                ok_all = jnp.isfinite(f_all) & (f_all <= f_max[None, :])
+                cand = ok_all & (ks[:, None] <= (kappa - 1)[None, :])
+                k2 = jnp.max(jnp.where(cand, ks[:, None], 0.0), axis=0)
+                f_k2 = jnp.sum(jnp.where(ks[:, None] == k2[None, :],
+                                         f_all, 0.0), axis=0)
+                kappa = jnp.where(good, kappa, k2)
+                f_new = jnp.where(good, f_new, f_k2)
+                alive &= good | (k2 >= 1)
+                f = jnp.where(alive, jnp.clip(f_new, 1e6, f_max), f)
+                p_sca, sca_ok = sca_power(kappa, f, p)
+                alive &= sca_ok
+                p = jnp.where(alive, p_sca, p)
+                t_tot = cc * kappa / f + t_up(p)
+                e_tot = 0.5 * net.v * cc * kappa * f ** 2 + e_up(p)
+                okc = alive & (t_tot <= net.t_th * (1 + 1e-6)) \
+                    & (e_tot <= e_bd * (1 + 1e-6))
+                rk = jnp.where(okc, kappa, rk)
+                rf = jnp.where(okc, f, rf)
+                rp = jnp.where(okc, p, rp)
+                rt = jnp.where(okc, t_tot, rt)
+                re_ = jnp.where(okc, e_tot, re_)
+                rfeas |= okc
+            return rk, rf, rp, rfeas, rt, re_
+
+        # Algorithm 1's sweep over initial power points: all five at once
+        sk, sf, sp, sfeas, st_, se = jax.vmap(from_point)(
+            p_max[None, :] * fracs[:, None])
+        bk = jnp.zeros_like(c)
+        bf, bp = f_max, p_max
+        bfeas = jnp.zeros(c.shape, bool)
+        bt = jnp.zeros_like(c)
+        be = jnp.zeros_like(c)
+        for i in range(len(fracs)):                 # keep the scalar order
+            better = sfeas[i] & (~bfeas | (sk[i] > bk))
+            bk = jnp.where(better, sk[i], bk)
+            bf = jnp.where(better, sf[i], bf)
+            bp = jnp.where(better, sp[i], bp)
+            bt = jnp.where(better, st_[i], bt)
+            be = jnp.where(better, se[i], be)
+            bfeas |= sfeas[i]
+        return bk, bf, bp, bfeas, bt, be
+
+    return jax.jit(solve)
+
+
+def optimize_clients_batched(net: NetworkConfig, sysb: ClientSystemBatch,
+                             ch: ChannelBatch, n_params: int
+                             ) -> ResourceDecisionBatch:
+    """All-clients ``resource.optimize_client``: one jitted f64 solve."""
+    solver = _make_solver(dataclasses.astuple(net))
+    with enable_x64():
+        cols = (sysb.c, sysb.s, sysb.f_max, sysb.p_max, sysb.e_bd,
+                ch.xi, ch.gamma)
+        out = solver(*[jnp.asarray(a, jnp.float64) for a in cols],
+                     jnp.float64(n_params))
+        kappa, f, p, feas, t, e = [np.asarray(o) for o in out]
+    return ResourceDecisionBatch(kappa=kappa.astype(np.int64), f=f, p=p,
+                                 feasible=feas.astype(bool), t_total=t,
+                                 e_total=e)
+
+
+def optimize_round_batched(rng: np.random.Generator, net: NetworkConfig,
+                           sysb: ClientSystemBatch, n_params: int
+                           ) -> ResourceDecisionBatch:
+    """One FL round: vectorized channel sampling + the batched solve (5)."""
+    return optimize_clients_batched(net, sysb, sample_channels(rng, sysb),
+                                    n_params)

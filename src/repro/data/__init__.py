@@ -2,7 +2,10 @@ from repro.data.video_caching import (Catalog, RequestStream, UserModel,
                                       make_population, D1_DIM)
 from repro.data.synthetic import (make_train_batch, train_batch_shapes,
                                   learnable_sequence_batch)
+from repro.data.online import (binomial_arrivals_batched, dataset_layout,
+                               draw_arrival_batch, pad_arrival_batch)
 
 __all__ = ["Catalog", "RequestStream", "UserModel", "make_population",
            "D1_DIM", "make_train_batch", "train_batch_shapes",
-           "learnable_sequence_batch"]
+           "learnable_sequence_batch", "binomial_arrivals_batched",
+           "dataset_layout", "draw_arrival_batch", "pad_arrival_batch"]

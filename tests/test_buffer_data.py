@@ -27,6 +27,49 @@ def test_fifo_buffer_invariants(capacity, labels):
         assert x[0, 0] == len(labels) - buf.size    # oldest retained sample
 
 
+def test_fifo_head_wraps_around_on_eviction():
+    """Once full, each insert overwrites the oldest slot and the head
+    pointer wraps modulo capacity."""
+    buf = OnlineBuffer.create(3, (1,), 10)
+    buf.stage(np.zeros((3, 1), np.float32), np.array([0, 1, 2]))
+    buf.commit()
+    assert (buf.size, buf.head) == (3, 0)
+    buf.stage(np.zeros((2, 1), np.float32), np.array([3, 4]))
+    buf.commit()
+    assert (buf.size, buf.head) == (3, 2)       # two evictions, head wrapped
+    assert list(buf.dataset()[1]) == [2, 3, 4]  # FIFO order preserved
+    buf.stage(np.zeros((1, 1), np.float32), np.array([5]))
+    buf.commit()
+    assert buf.head == 0                        # wrapped past the end
+    assert list(buf.dataset()[1]) == [3, 4, 5]
+
+
+def test_single_commit_larger_than_capacity_keeps_last():
+    """One commit of more staged samples than capacity retains exactly the
+    last `capacity` samples (earlier ones are immediately overwritten)."""
+    buf = OnlineBuffer.create(4, (1,), 100)
+    buf.stage(np.arange(11, dtype=np.float32).reshape(11, 1), np.arange(11))
+    assert buf.commit() == 11
+    assert buf.size == 4
+    assert list(buf.dataset()[1]) == [7, 8, 9, 10]
+    # again from a non-empty, wrapped state
+    buf.stage(np.arange(9, dtype=np.float32).reshape(9, 1),
+              np.arange(20, 29))
+    buf.commit()
+    assert buf.size == 4
+    assert list(buf.dataset()[1]) == [25, 26, 27, 28]
+
+
+def test_empty_commit_is_noop():
+    buf = OnlineBuffer.create(4, (1,), 10)
+    buf.stage(np.zeros((2, 1), np.float32), np.array([7, 8]))
+    buf.commit()
+    size, head = buf.size, buf.head
+    assert buf.commit() == 0                    # nothing staged
+    assert (buf.size, buf.head) == (size, head)
+    assert list(buf.dataset()[1]) == [7, 8]
+
+
 def test_staged_arrivals_apply_only_on_commit():
     buf = OnlineBuffer.create(4, (1,), 5)
     buf.stage(np.zeros((2, 1), np.float32), np.array([1, 2]))

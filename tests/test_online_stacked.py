@@ -1,0 +1,208 @@
+"""Vectorized online wireless pipeline vs the per-client oracles.
+
+Parity bars (the acceptance criteria of the online-pipeline PR):
+  * batched resource optimizer == per-client NumPy optimizer: kappa and
+    feasibility exactly, f and p within 1e-6 relative, across >= 100
+    randomized client/channel configurations;
+  * stacked FIFO commits == ``core/buffer.py`` oracle state exactly over
+    multi-round runs with wrap-around.
+"""
+import numpy as np
+import pytest
+
+from repro.core.buffer import OnlineBuffer
+from repro.core.buffer_stacked import StackedOnlineBuffer
+from repro.core.resource import (ChannelState, NetworkConfig, make_clients,
+                                 optimize_client, sample_channel)
+from repro.core.resource_stacked import (optimize_clients_batched,
+                                         sample_channels, stack_clients)
+
+NET = NetworkConfig()
+
+
+# ---------------------------------------------------------------------------
+# batched resource optimizer vs scalar oracle
+# ---------------------------------------------------------------------------
+
+def test_sample_channels_matches_scalar_stream():
+    """One array draw consumes the Generator stream exactly like U scalar
+    draws, so loop and batched rounds see identical channels per seed."""
+    rng = np.random.default_rng(11)
+    clients = make_clients(rng, 16)
+    r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+    scalar = [sample_channel(r1, s) for s in clients]
+    batch = sample_channels(r2, stack_clients(clients))
+    np.testing.assert_allclose([c.xi for c in scalar], batch.xi, rtol=1e-12)
+    np.testing.assert_allclose([c.gamma for c in scalar], batch.gamma,
+                               rtol=1e-12)
+
+
+@pytest.mark.parametrize("seed,n_params", [(0, 18_000), (0, 1_000_000),
+                                           (1, 18_000), (1, 3_900_000)])
+def test_batched_optimizer_matches_scalar(seed, n_params):
+    """64 clients x 4 (seed, payload) combos = 256 randomized configs."""
+    rng = np.random.default_rng(seed)
+    clients = make_clients(rng, 64)
+    sysb = stack_clients(clients)
+    chb = sample_channels(rng, sysb)
+    scalar = [optimize_client(NET, s, ChannelState(xi, gm), n_params)
+              for s, xi, gm in zip(clients, chb.xi, chb.gamma)]
+    batch = optimize_clients_batched(NET, sysb, chb, n_params)
+    np.testing.assert_array_equal([d.kappa for d in scalar], batch.kappa)
+    np.testing.assert_array_equal([d.feasible for d in scalar],
+                                  batch.feasible)
+    m = batch.feasible
+    assert m.any()                      # the comparison must bite
+    sf = np.array([d.f for d in scalar])
+    sp = np.array([d.p for d in scalar])
+    np.testing.assert_allclose(batch.f[m], sf[m], rtol=1e-6)
+    np.testing.assert_allclose(batch.p[m], sp[m], rtol=1e-6)
+    st = np.array([d.t_total for d in scalar])
+    se = np.array([d.e_total for d in scalar])
+    np.testing.assert_allclose(batch.t_total[m], st[m], rtol=1e-6)
+    np.testing.assert_allclose(batch.e_total[m], se[m], rtol=1e-6)
+
+
+def test_batched_decisions_satisfy_constraints():
+    rng = np.random.default_rng(2)
+    sysb = stack_clients(make_clients(rng, 64))
+    chb = sample_channels(rng, sysb)
+    dec = optimize_clients_batched(NET, sysb, chb, 1_000_000)
+    m = dec.feasible
+    assert np.all(dec.kappa[~m] == 0)
+    assert np.all((dec.kappa[m] >= 1) & (dec.kappa[m] <= NET.kappa_max))
+    assert np.all(dec.f[m] <= sysb.f_max[m] * (1 + 1e-9))
+    assert np.all(dec.p[m] <= sysb.p_max[m] * (1 + 1e-9))
+    assert np.all(dec.t_total[m] <= NET.t_th * (1 + 1e-5))
+    assert np.all(dec.e_total[m] <= sysb.e_bd[m] * (1 + 1e-5))
+
+
+# ---------------------------------------------------------------------------
+# stacked FIFO buffer vs oracle
+# ---------------------------------------------------------------------------
+
+def _assert_state_matches(oracles, sbuf, rnd):
+    for u, oracle in enumerate(oracles):
+        ox, oy = oracle.dataset()
+        sx, sy = sbuf.dataset(u)
+        assert np.array_equal(ox, sx), (rnd, u)
+        assert np.array_equal(oy, sy), (rnd, u)
+        assert oracle.size == sbuf.sizes[u]
+        assert oracle.head == sbuf.heads[u]
+
+
+def test_stacked_buffer_matches_oracle_multiround():
+    """Random arrival bursts (incl. empty and > capacity) over 15 rounds:
+    dataset contents, sizes, head pointers, histograms and shift proxies all
+    match the sequential oracle exactly, through wrap-around."""
+    rng = np.random.default_rng(0)
+    U, C, feat = 8, 10, (2,)
+    caps = rng.integers(3, 13, size=U)
+    oracles = [OnlineBuffer.create(int(c), feat, C) for c in caps]
+    sbuf = StackedOnlineBuffer.create(caps, feat, C, stage_capacity=40)
+    counter = 0
+    for rnd in range(15):
+        counts = rng.integers(0, 2 * caps.max(), size=U)
+        counts[rng.random(U) < 0.25] = 0
+        A = int(max(counts.max(), 1))
+        xs = np.zeros((U, A) + feat, np.float32)
+        ys = np.zeros((U, A), np.int64)
+        for u in range(U):
+            n = int(counts[u])
+            if n == 0:
+                continue
+            x = np.zeros((n,) + feat, np.float32)
+            x[:, 0] = np.arange(counter, counter + n)   # unique sample ids
+            y = rng.integers(0, C, size=n)
+            counter += n
+            oracles[u].stage(x, y)
+            xs[u, :n], ys[u, :n] = x, y
+        sbuf.stage(xs, ys, counts)
+        assert sum(b.commit() for b in oracles) == sbuf.commit()
+        _assert_state_matches(oracles, sbuf, rnd)
+        np.testing.assert_allclose(
+            np.stack([b.label_histogram() for b in oracles]),
+            sbuf.label_histograms(), atol=1e-6)
+        np.testing.assert_allclose(
+            [b.distribution_shift() for b in oracles],
+            sbuf.distribution_shifts(), atol=1e-6)
+    assert np.any(sbuf.heads > 0)       # wrap-around actually happened
+
+
+def test_stacked_buffer_empty_commit_is_noop():
+    sbuf = StackedOnlineBuffer.create(np.array([4, 6]), (1,), 5)
+    sbuf.stage(np.ones((2, 3, 1), np.float32), np.ones((2, 3), np.int64),
+               np.array([3, 2]))
+    sbuf.commit()
+    sizes, heads = sbuf.sizes.copy(), sbuf.heads.copy()
+    assert sbuf.commit() == 0
+    assert np.array_equal(sbuf.sizes, sizes)
+    assert np.array_equal(sbuf.heads, heads)
+
+
+def test_stacked_buffer_overflow_commit_keeps_last_capacity():
+    """A single commit of more staged samples than capacity retains exactly
+    the last cap samples in arrival order (oracle overwrite semantics)."""
+    caps = np.array([3, 5])
+    oracle = [OnlineBuffer.create(int(c), (1,), 100) for c in caps]
+    sbuf = StackedOnlineBuffer.create(caps, (1,), 100, stage_capacity=9)
+    xs = np.arange(18, dtype=np.float32).reshape(2, 9, 1)
+    ys = np.arange(18, dtype=np.int64).reshape(2, 9)
+    for u in range(2):
+        oracle[u].stage(xs[u], ys[u])
+        oracle[u].commit()
+    sbuf.stage(xs, ys, np.array([9, 9]))
+    sbuf.commit()
+    _assert_state_matches(oracle, sbuf, 0)
+    assert list(sbuf.dataset(0)[1]) == [6, 7, 8]
+    assert list(sbuf.dataset(1)[1]) == [13, 14, 15, 16, 17]
+
+
+def test_stacked_buffer_stage_capacity_guard():
+    sbuf = StackedOnlineBuffer.create(np.array([4]), (1,), 5,
+                                      stage_capacity=2)
+    with pytest.raises(ValueError):
+        sbuf.stage(np.zeros((1, 3, 1), np.float32),
+                   np.zeros((1, 3), np.int64), np.array([3]))
+
+
+def test_stacked_buffer_sampling_hits_live_window_only():
+    rng = np.random.default_rng(3)
+    caps = np.array([5, 9, 7])
+    sbuf = StackedOnlineBuffer.create(caps, (1,), 5, stage_capacity=9)
+    counts = np.array([2, 9, 5])
+    xs = np.zeros((3, 9, 1), np.float32)
+    ys = rng.integers(0, 5, (3, 9))
+    sbuf.stage(xs, ys, counts)
+    sbuf.commit()
+    slots = sbuf.sample_slots(rng, (4, 6))
+    assert slots.shape == (3, 4, 6)
+    for u in range(3):
+        live = set((sbuf.heads[u] + np.arange(sbuf.sizes[u])) % caps[u])
+        assert set(slots[u].ravel()) <= live
+    batch = sbuf.gather(slots)
+    assert batch["x"].shape == (3, 4, 6, 1)
+    assert batch["y"].shape == (3, 4, 6)
+
+
+# ---------------------------------------------------------------------------
+# online vectorized harness
+# ---------------------------------------------------------------------------
+
+def test_online_vectorized_harness_smoke():
+    from benchmarks.common import ExperimentConfig, run_vectorized_experiment
+    xc = ExperimentConfig(model="mlp", dataset=2, num_clients=16, rounds=2,
+                          seed=3)
+    hist = run_vectorized_experiment("osafl", xc, eval_samples=64)
+    assert len(hist) == 2
+    for h in hist:
+        assert np.isfinite(h["test_loss"])
+        assert 0 <= h["participants"] <= 16
+    assert hist[-1]["participants"] > 0
+
+
+@pytest.mark.slow
+def test_online_pipeline_speedup_at_256():
+    from benchmarks.bench_online import bench_pipeline
+    r = bench_pipeline(U=256, rounds=3)
+    assert r["speedup"] >= 10, r

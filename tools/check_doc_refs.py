@@ -1,0 +1,117 @@
+"""Dangling-documentation-link checker.
+
+Greps every tracked markdown file and every module docstring for tokens that
+look like references to repo files (path-like tokens with a known top-level
+prefix, ``repro/``-rooted module paths, or all-caps root-level markdown
+names) and fails if a referenced file does not exist. This is the CI guard
+against DESIGN.md-style references to documents that were never written.
+
+Usage: python tools/check_doc_refs.py  (exit 0 = clean, 1 = dangling refs)
+"""
+from __future__ import annotations
+
+import ast
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# files whose references are prospective or about external repos
+EXCLUDE = {"ISSUE.md", "PAPERS.md", "SNIPPETS.md"}
+
+TOKEN = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|md|toml|txt|ya?ml)\b")
+
+# directories a path-like reference may be rooted at
+TOP_DIRS = ("src", "tests", "benchmarks", "examples", "tools", ".github",
+            "experiments")
+
+
+def tracked_files() -> list[str]:
+    out = subprocess.run(["git", "ls-files", "-z"], cwd=ROOT,
+                         capture_output=True, text=True, check=True)
+    return [p for p in out.stdout.split("\0") if p]
+
+
+def candidate_paths(token: str) -> list[Path]:
+    """Repo locations a doc token may resolve to."""
+    token = token.lstrip("./")
+    cands = [ROOT / token]
+    if token.startswith("repro/"):
+        cands.append(ROOT / "src" / token)
+    if token.startswith("github/"):
+        # the TOKEN regex cannot start at '.', so .github/... loses its dot
+        cands.append(ROOT / ("." + token))
+    if "/" in token and not token.startswith(TOP_DIRS):
+        # module-relative references like core/buffer.py or kernels/ref.py
+        cands.append(ROOT / "src" / "repro" / token)
+    return cands
+
+
+def is_repo_reference(token: str, basenames: set) -> bool:
+    """Heuristic: which tokens claim to name a file of THIS repo?"""
+    token = token.lstrip("./")
+    if any(ch in token for ch in "*{<"):
+        return False
+    if "/" in token:
+        head = token.split("/")[0]
+        return token.startswith(TOP_DIRS) or head in ("repro", "github",
+                                                      "core", "kernels",
+                                                      "models", "data",
+                                                      "launch", "configs",
+                                                      "checkpoint")
+    # bare names: root-level UPPERCASE.md docs must exist at the root;
+    # bare code names (client.py, ci.yml) must exist *somewhere* tracked
+    if token.endswith(".md"):
+        return token[:-3].isupper()
+    return token in basenames or token.endswith((".py", ".yml", ".yaml"))
+
+
+def doc_sources() -> list[tuple[str, str]]:
+    """(origin, text) pairs: tracked markdown + module docstrings."""
+    sources = []
+    for rel in tracked_files():
+        if rel in EXCLUDE or Path(rel).name in EXCLUDE:
+            continue
+        path = ROOT / rel
+        if rel.endswith(".md"):
+            sources.append((rel, path.read_text()))
+        elif rel.endswith(".py"):
+            try:
+                doc = ast.get_docstring(ast.parse(path.read_text()))
+            except SyntaxError:
+                doc = None
+            if doc:
+                sources.append((rel, doc))
+    return sources
+
+
+def main() -> int:
+    tracked = tracked_files()
+    basenames = {Path(t).name for t in tracked}
+    dangling = []
+    for origin, text in doc_sources():
+        for token in set(TOKEN.findall(text)):
+            if not is_repo_reference(token, basenames):
+                continue
+            bare = token.lstrip("./")
+            if "/" not in bare:
+                if bare.endswith(".md") and not (ROOT / bare).exists():
+                    dangling.append((origin, token))
+                elif not bare.endswith(".md") and bare not in basenames:
+                    dangling.append((origin, token))
+                continue
+            if not any(p.exists() for p in candidate_paths(token)):
+                dangling.append((origin, token))
+    if dangling:
+        print("dangling repo-file references:")
+        for origin, token in sorted(dangling):
+            print(f"  {origin}: {token}")
+        return 1
+    print(f"doc refs OK ({len(doc_sources())} sources scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
