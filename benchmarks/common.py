@@ -2,13 +2,17 @@
 for CPU: knobs recorded in EXPERIMENTS.md)."""
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint
+from repro.checkpoint import CheckpointError
 from repro.configs.base import FLConfig
 from repro.core.baselines import make_server
 from repro.core.buffer import OnlineBuffer, binomial_arrivals
@@ -18,12 +22,74 @@ from repro.core.osafl import ClientUpdate
 from repro.core.resource import (NetworkConfig, make_clients, optimize_round)
 from repro.core.resource_stacked import optimize_round_batched, stack_clients
 from repro.data.online import (binomial_arrivals_batched, dataset_layout,
-                               draw_arrival_batch, pad_arrival_batch)
+                               draw_arrival_batch, load_streams_state,
+                               pad_arrival_batch, streams_state_dict)
 from repro.data.video_caching import make_population
 from repro.models.small import REGISTRY, init_small, small_loss
 
 MODEL_PARAMS = {"fcn": 3_900_000, "cnn": 1_100_000, "squeezenet": 740_000,
                 "lstm": 430_000, "mlp": 18_000}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume plumbing (RunState snapshots — see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def checkpoint_path(checkpoint_dir, t: int) -> Path:
+    """Canonical snapshot location for the state after round t (1-based:
+    a snapshot named round_00003 holds the state with rounds 0-2 done)."""
+    return Path(checkpoint_dir) / f"round_{t:05d}"
+
+
+def _validate_ckpt_args(save_every_k, checkpoint_dir) -> None:
+    if bool(save_every_k) != (checkpoint_dir is not None):
+        raise ValueError(
+            "save_every_k and checkpoint_dir must be passed together "
+            f"(got save_every_k={save_every_k!r}, "
+            f"checkpoint_dir={checkpoint_dir!r})")
+
+
+def _run_shape(xc: "ExperimentConfig", eval_samples: int) -> dict:
+    """Everything that must match between the saving and the resuming run
+    for the trajectory to continue bit-exactly: the whole ExperimentConfig
+    (resume re-derives population/capacities/test set/system params from
+    it) except ``rounds`` — resuming into a longer run is the point — plus
+    the eval set size. JSON-normalized so it compares against a loaded
+    snapshot."""
+    cfg = dataclasses.asdict(xc)
+    cfg.pop("rounds")
+    cfg["capacity"] = list(cfg["capacity"])
+    cfg["eval_samples"] = int(eval_samples)
+    return cfg
+
+
+def _check_snapshot(snap: dict, engine: str, alg: str,
+                    xc: "ExperimentConfig", eval_samples: int) -> None:
+    """A snapshot is only resumable into the exact run shape it came from."""
+    got = dict(snap.get("config") or {}, engine=snap.get("engine"),
+               alg=snap.get("alg"))
+    want = dict(_run_shape(xc, eval_samples), engine=engine, alg=alg)
+    bad = sorted(k for k in set(got) | set(want)
+                 if got.get(k) != want.get(k))
+    if bad:
+        raise CheckpointError(
+            "cannot resume: snapshot and run disagree on "
+            + ", ".join(f"{k} ({got.get(k)!r} vs {want.get(k)!r})"
+                        for k in bad))
+    if int(snap["next_round"]) > xc.rounds:
+        raise CheckpointError(
+            f"snapshot already holds {snap['next_round']} rounds, the run "
+            f"asks for {xc.rounds}")
+
+
+def resume_smoke_config(rounds: int, num_clients: int = 8
+                        ) -> ExperimentConfig:
+    """Canonical small online run for the resume-determinism checks — one
+    definition shared by tests/test_checkpoint_resume.py and the CI smoke
+    tools/resume_smoke.py so they always cover the same run shape."""
+    return ExperimentConfig(model="mlp", dataset=2, num_clients=num_clients,
+                            rounds=rounds, capacity=(12, 24), arrivals=4,
+                            batch=8, seed=5)
 
 
 @dataclass
@@ -49,8 +115,17 @@ def _draw(stream, n, dataset):
             else stream.draw_dataset2(n))
 
 
-def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400):
-    """One FL training run; returns per-round test metrics."""
+def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400,
+                   save_every_k: int = None, checkpoint_dir=None,
+                   resume_from=None):
+    """One FL training run; returns per-round test metrics.
+
+    With ``save_every_k``/``checkpoint_dir`` set, a full RunState snapshot
+    (params, contribution buffers, FIFO buffers incl. staged arrivals,
+    scores, staleness flags, every Generator stream) is written after every
+    k-th round; ``resume_from`` restores one and continues the trajectory
+    bit-identically (tests/test_checkpoint_resume.py)."""
+    _validate_ckpt_args(save_every_k, checkpoint_dir)
     model = xc.model
     cat, streams = make_population(xc.seed, xc.num_clients, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)
@@ -83,8 +158,18 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400):
                                cell_radius_m=xc.cell_radius_m)
     n_params = MODEL_PARAMS.get(model, 1_000_000)
 
-    history = []
-    for t in range(xc.rounds):
+    history, start_round = [], 0
+    if resume_from is not None:
+        snap = checkpoint.load_run_state(resume_from)
+        _check_snapshot(snap, "loop", alg, xc, eval_samples)
+        checkpoint.set_generator_state(rng, snap["rng"])
+        server.load_state_dict(snap["server"])
+        for b, sd in zip(bufs, snap["buffers"]):
+            b.load_state_dict(sd)
+        load_streams_state(streams, snap["streams"])
+        history = list(snap["history"])
+        start_round = int(snap["next_round"])
+    for t in range(start_round, xc.rounds):
         t_start = time.perf_counter()
         if xc.use_resource_opt:
             decisions = optimize_round(rng, net, clients_sys, n_params)
@@ -112,11 +197,24 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400):
                         "test_acc": float(m["accuracy"]),
                         "participants": len(updates),
                         "round_s": time.perf_counter() - t_start})
+        if save_every_k and (t + 1) % save_every_k == 0:
+            checkpoint.save_run_state(
+                checkpoint_path(checkpoint_dir, t + 1),
+                {"engine": "loop", "alg": alg,
+                 "config": _run_shape(xc, eval_samples), "next_round": t + 1,
+                 "rng": checkpoint.generator_state(rng),
+                 "server": server.state_dict(),
+                 "buffers": [b.state_dict() for b in bufs],
+                 "streams": streams_state_dict(streams),
+                 "history": history},
+                metadata={"engine": "loop", "alg": alg, "round": t + 1})
     return history
 
 
 def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
-                              eval_samples: int = 400):
+                              eval_samples: int = 400,
+                              save_every_k: int = None, checkpoint_dir=None,
+                              resume_from=None):
     """Stacked-engine counterpart of ``run_experiment``: the whole cohort
     trains under one ``jax.vmap``, the server round is one vectorized
     (U, N)-buffer update, and the paper's full *online* setting runs in
@@ -126,7 +224,14 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     (``resource_stacked``, all clients in one jitted f64 solve). So
     ``xc.num_clients`` can be hundreds to thousands with no loss of paper
     fidelity; only the request streams themselves stay per-client Python.
+
+    ``save_every_k``/``checkpoint_dir``/``resume_from`` mirror
+    ``run_experiment``: full RunState snapshots every k rounds, bit-identical
+    mid-stream resume (the setup below re-derives everything deterministic
+    from ``xc.seed`` — population, capacities, test set, system params — and
+    the snapshot then overwrites all mutable state).
     """
+    _validate_ckpt_args(save_every_k, checkpoint_dir)
     model = xc.model
     U = xc.num_clients
     cat, streams = make_population(xc.seed, U, topk=xc.topk)
@@ -170,8 +275,17 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
                                       cell_radius_m=xc.cell_radius_m))
     n_params = MODEL_PARAMS.get(model, 1_000_000)
 
-    history = []
-    for t in range(xc.rounds):
+    history, start_round = [], 0
+    if resume_from is not None:
+        snap = checkpoint.load_run_state(resume_from)
+        _check_snapshot(snap, "stacked", alg, xc, eval_samples)
+        checkpoint.set_generator_state(rng, snap["rng"])
+        server.load_state_dict(snap["server"])
+        sbuf.load_state_dict(snap["buffer"])
+        load_streams_state(streams, snap["streams"])
+        history = list(snap["history"])
+        start_round = int(snap["next_round"])
+    for t in range(start_round, xc.rounds):
         t_start = time.perf_counter()
         counts = binomial_arrivals_batched(rng, xc.arrivals, p_ac)
         sbuf.stage(*draw_arrival_batch(streams, counts, xc.dataset,
@@ -202,6 +316,17 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
                         "test_acc": float(m["accuracy"]),
                         "participants": int(active.sum()),
                         "round_s": time.perf_counter() - t_start})
+        if save_every_k and (t + 1) % save_every_k == 0:
+            checkpoint.save_run_state(
+                checkpoint_path(checkpoint_dir, t + 1),
+                {"engine": "stacked", "alg": alg,
+                 "config": _run_shape(xc, eval_samples), "next_round": t + 1,
+                 "rng": checkpoint.generator_state(rng),
+                 "server": server.state_dict(),
+                 "buffer": sbuf.state_dict(),
+                 "streams": streams_state_dict(streams),
+                 "history": history},
+                metadata={"engine": "stacked", "alg": alg, "round": t + 1})
     return history
 
 

@@ -1,5 +1,22 @@
-"""npz checkpointing with path-flattened keys (host-gathered; adequate for the
-CPU engine; a real deployment would swap in per-shard array serialization)."""
+"""Checkpointing: params pytrees and full online-run state.
+
+Two layers, one on-disk convention (``<path>[.npz]`` + ``<path>.meta.json``):
+
+  * params-only helpers (``save`` / ``restore`` / ``load_metadata``) — npz
+    with path-flattened keys, used by ``launch/train.py`` and the examples.
+    Host-gathered; adequate for the CPU engines; a real deployment would
+    swap in per-shard array serialization.
+  * run-state snapshots (``save_run_state`` / ``load_run_state`` in
+    ``run_state.py``) — versioned nested-tree snapshots covering everything
+    a long online FL run accumulates (FIFO buffers, staged arrivals, server
+    contribution buffers, scores, staleness, Generator streams). The
+    harness wiring lives in ``benchmarks/common.py`` (``save_every_k`` /
+    ``resume_from``); resume determinism is proven bit-exactly by
+    ``tests/test_checkpoint_resume.py``.
+
+Structure or version mismatches raise ``CheckpointError`` with the offending
+keys/dtypes named — never a bare ``assert`` or a silent cast.
+"""
 from __future__ import annotations
 
 import json
@@ -7,6 +24,20 @@ from pathlib import Path
 
 import jax
 import numpy as np
+
+from repro.checkpoint.run_state import (FORMAT_VERSION, CheckpointError,
+                                        _npz_path, atomic_write,
+                                        check_version, diff_snapshots,
+                                        find_sidecar, generator_state,
+                                        load_run_state, meta_path,
+                                        parse_sidecar, read_sidecar,
+                                        save_run_state, set_generator_state)
+
+__all__ = [
+    "CheckpointError", "FORMAT_VERSION", "diff_snapshots",
+    "generator_state", "load_metadata", "load_run_state", "restore", "save",
+    "save_run_state", "set_generator_state",
+]
 
 
 def _key(path) -> str:
@@ -22,21 +53,45 @@ def _flatten(params) -> dict:
 def save(path, params, step: int = 0, metadata: dict = None):
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    np.savez(path, **_flatten(params))
-    Path(str(path) + ".meta.json").write_text(
-        json.dumps({"step": step, **(metadata or {})}))
+    flat = _flatten(params)
+    atomic_write(_npz_path(path), lambda tmp: np.savez(tmp, **flat))
+    atomic_write(meta_path(path), lambda tmp: tmp.write_text(
+        json.dumps({"format_version": FORMAT_VERSION, "kind": "params",
+                    "step": step, **(metadata or {})})))
 
 
 def restore(path, like):
-    """Restore into the structure of ``like`` (a params pytree)."""
-    p = str(path)
-    data = np.load(p if p.endswith(".npz") else p + ".npz")
+    """Restore into the structure of ``like`` (a params pytree). Raises
+    ``CheckpointError`` naming missing/extra keys or dtype mismatches, and
+    refuses future snapshot-format versions (legacy sidecar-less / unversioned
+    checkpoints still load)."""
+    sidecar = find_sidecar(path)
+    if sidecar is not None:
+        check_version(parse_sidecar(sidecar), path)
+    npz = _npz_path(path)
+    if not npz.exists():
+        raise CheckpointError(f"checkpoint array file {npz} not found")
+    data = np.load(npz)
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-    assert set(data.files) == {_key(pp) for pp, _ in flat}, \
-        "checkpoint structure mismatch"
-    new_leaves = [data[_key(pp)].astype(leaf.dtype) for pp, leaf in flat]
-    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+    want = {_key(pp): leaf for pp, leaf in flat}
+    missing = sorted(set(want) - set(data.files))
+    extra = sorted(set(data.files) - set(want))
+    if missing or extra:
+        raise CheckpointError(
+            f"checkpoint {path} does not match the target structure: "
+            f"missing keys {missing or '[]'}, extra keys {extra or '[]'}")
+    bad_dtype = [f"{k}: checkpoint {data[k].dtype} != target {v.dtype}"
+                 for k, v in want.items() if data[k].dtype != v.dtype]
+    if bad_dtype:
+        raise CheckpointError(
+            f"checkpoint {path} dtype mismatch: " + "; ".join(bad_dtype))
+    return jax.tree_util.tree_unflatten(
+        treedef, [data[_key(pp)] for pp, _ in flat])
 
 
 def load_metadata(path) -> dict:
-    return json.loads(Path(str(path) + ".meta.json").read_text())
+    """The checkpoint's sidecar metadata; ``CheckpointError`` (naming the
+    path) when the sidecar is absent, instead of a deep ``FileNotFoundError``."""
+    meta = read_sidecar(path)
+    check_version(meta, path)
+    return meta

@@ -1,0 +1,249 @@
+"""Versioned on-disk snapshots of arbitrary nested run state.
+
+``repro/checkpoint``'s original npz helper covers a params pytree only; long
+online runs also carry FIFO buffer contents, staged arrivals, server
+contribution buffers, scores, staleness flags and several NumPy Generator
+streams. This module is the serialization layer under the full ``RunState``
+snapshot (see DESIGN.md "Checkpoint/restore of online-run state"):
+
+  * ``save_run_state(path, state)`` / ``load_run_state(path)`` round-trip a
+    nested tree of dicts / lists / scalars / None / numpy-or-jax arrays.
+    Array leaves go into one ``.npz`` archive under their tree path; the
+    non-array skeleton (including arbitrary-precision ints such as PCG64
+    Generator words) goes into the ``.meta.json`` sidecar with
+    ``{"__array__": <npz key>}`` markers where arrays were.
+  * Every sidecar carries ``format_version`` + ``kind``; loading a snapshot
+    written by a future (or unknown) format fails with ``CheckpointError``
+    instead of silently reinterpreting arrays.
+  * ``generator_state`` / ``set_generator_state`` snapshot and restore
+    ``np.random.Generator`` streams mid-sequence (the bit_generator state
+    dict is plain JSON-able ints), so arrivals, channel shadowing and batch
+    sampling resume on the exact draw they would have seen uninterrupted.
+
+The format is host-gathered, like the params helper: adequate for the CPU
+engines; a sharded deployment would swap in per-shard array serialization
+behind the same tree codec.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+FORMAT_VERSION = 1
+_ARRAY_KEY = "__array__"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be read/written against the live structures."""
+
+
+# ---------------------------------------------------------------------------
+# np.random.Generator streams
+# ---------------------------------------------------------------------------
+
+def generator_state(rng: np.random.Generator) -> dict:
+    """JSON-able snapshot of a Generator's exact stream position."""
+    return copy.deepcopy(rng.bit_generator.state)
+
+
+def set_generator_state(rng: np.random.Generator, state: dict) -> None:
+    """Restore a stream snapshot taken by ``generator_state``."""
+    rng.bit_generator.state = copy.deepcopy(state)
+
+
+# ---------------------------------------------------------------------------
+# nested-tree codec
+# ---------------------------------------------------------------------------
+
+def _encode(obj, arrays: Dict[str, np.ndarray], path: str):
+    """Nested state -> JSON skeleton, array leaves moved into ``arrays``."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    if hasattr(obj, "__array__") and hasattr(obj, "dtype"):
+        arrays[path] = np.asarray(obj)
+        return {_ARRAY_KEY: path}
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            if not isinstance(k, str) or k == _ARRAY_KEY:
+                raise CheckpointError(
+                    f"state dict key {k!r} at {path!r} is not serializable "
+                    f"(keys must be strings, {_ARRAY_KEY!r} is reserved)")
+            out[k] = _encode(v, arrays, f"{path}/{k}")
+        return out
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v, arrays, f"{path}/{i}") for i, v in enumerate(obj)]
+    raise CheckpointError(
+        f"cannot serialize {type(obj).__name__} at {path!r}")
+
+
+def _decode(node, data):
+    if isinstance(node, dict):
+        if set(node) == {_ARRAY_KEY}:
+            key = node[_ARRAY_KEY]
+            if key not in data:
+                raise CheckpointError(
+                    f"sidecar references array {key!r} which is missing "
+                    "from the npz archive (torn or mismatched save?)")
+            return data[key]
+        return {k: _decode(v, data) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_decode(v, data) for v in node]
+    return node
+
+
+# ---------------------------------------------------------------------------
+# on-disk format
+# ---------------------------------------------------------------------------
+
+def _npz_path(path) -> Path:
+    p = str(path)
+    return Path(p if p.endswith(".npz") else p + ".npz")
+
+
+def meta_path(path) -> Path:
+    """Canonical sidecar location (written by save/save_run_state); ``ckpt``
+    and ``ckpt.npz`` resolve to the same file so the version check cannot be
+    dodged by the suffixed path form."""
+    p = str(path)
+    if p.endswith(".npz"):
+        p = p[:-4]
+    return Path(p + ".meta.json")
+
+
+def find_sidecar(path) -> Optional[Path]:
+    """The existing sidecar for ``path``, or None. Probes the canonical
+    stem-based location first, then the legacy ``<file>.npz.meta.json`` spot
+    (pre-RunState checkpoints appended '.meta.json' to the caller's path
+    verbatim, so '.npz'-suffixed saves put it after the extension)."""
+    legacy = Path(str(_npz_path(path)) + ".meta.json")
+    for mp in (meta_path(path), legacy):
+        if mp.exists():
+            return mp
+    return None
+
+
+def parse_sidecar(mp: Path) -> dict:
+    """Parse an already-located sidecar file."""
+    try:
+        return json.loads(mp.read_text())
+    except json.JSONDecodeError as e:
+        raise CheckpointError(f"corrupt checkpoint sidecar {mp}: {e}") from e
+
+
+def read_sidecar(path) -> dict:
+    """The ``.meta.json`` sidecar dict, or CheckpointError if absent/corrupt."""
+    mp = find_sidecar(path)
+    if mp is None:
+        raise CheckpointError(
+            f"checkpoint sidecar {meta_path(path)} not found — was this "
+            "checkpoint written by repro.checkpoint.save/save_run_state?")
+    return parse_sidecar(mp)
+
+
+def atomic_write(target: Path, writer) -> None:
+    """Write via a temp file + ``os.replace`` so an interrupted save never
+    tears ``target`` (the previous version stays intact until the new one is
+    fully on disk). ``writer`` receives the temp path; for npz targets the
+    temp name keeps the '.npz' suffix so ``np.savez`` doesn't append one."""
+    tmp = target.with_name(".tmp." + target.name)
+    try:
+        writer(tmp)
+        os.replace(tmp, target)
+    finally:
+        tmp.unlink(missing_ok=True)
+
+
+def check_version(meta: dict, path, expect_kind: str = None) -> None:
+    """Reject future/unknown snapshot formats instead of reinterpreting."""
+    ver = meta.get("format_version", 0)
+    if not isinstance(ver, int) or ver > FORMAT_VERSION:
+        raise CheckpointError(
+            f"checkpoint {path} has format_version {ver!r}; this build "
+            f"reads versions <= {FORMAT_VERSION} — refusing to reinterpret "
+            "a future snapshot format")
+    kind = meta.get("kind", "params")
+    if expect_kind is not None and kind != expect_kind:
+        raise CheckpointError(
+            f"checkpoint {path} holds a {kind!r} snapshot, expected "
+            f"{expect_kind!r}")
+    if expect_kind == "run_state" and ver < 1:
+        raise CheckpointError(
+            f"checkpoint {path} predates the run_state format "
+            f"(format_version {ver!r})")
+
+
+def save_run_state(path, state, metadata: dict = None) -> None:
+    """Write a nested run-state tree as ``path[.npz]`` + ``.meta.json``."""
+    arrays: Dict[str, np.ndarray] = {}
+    tree = _encode(state, arrays, "s")
+    npz = _npz_path(path)
+    npz.parent.mkdir(parents=True, exist_ok=True)
+    atomic_write(npz, lambda tmp: np.savez(tmp, **arrays))
+    atomic_write(meta_path(path), lambda tmp: tmp.write_text(json.dumps(
+        {"format_version": FORMAT_VERSION, "kind": "run_state",
+         "tree": tree, "metadata": metadata or {}})))
+
+
+def load_run_state(path):
+    """Read a ``save_run_state`` snapshot back into nested plain structures
+    (dicts / lists / scalars / np arrays). Version-checked."""
+    meta = read_sidecar(path)
+    check_version(meta, path, expect_kind="run_state")
+    npz = _npz_path(path)
+    if not npz.exists():
+        raise CheckpointError(f"checkpoint array file {npz} not found")
+    with np.load(npz) as data:
+        return _decode(meta["tree"], dict(data.items()))
+
+
+def diff_snapshots(a, b, path: str = "s",
+                   skip: Tuple[str, ...] = ("round_s",)) -> List[str]:
+    """Bit-exact recursive comparison of two loaded snapshot trees; returns
+    difference descriptions (empty list == identical). ``skip`` names dict
+    keys excluded everywhere — by default the wall-clock timings, the only
+    legitimately divergent leaves between an uninterrupted run and a
+    save/resume run. Shared by tests/test_checkpoint_resume.py and the CI
+    smoke tools/resume_smoke.py."""
+    out: List[str] = []
+    if isinstance(a, dict) and isinstance(b, dict):
+        for k in sorted(set(a) | set(b)):
+            if k in skip:
+                continue
+            if k not in a or k not in b:
+                out.append(f"{path}/{k}: present on one side only")
+            else:
+                out += diff_snapshots(a[k], b[k], f"{path}/{k}", skip)
+    elif isinstance(a, list) and isinstance(b, list):
+        if len(a) != len(b):
+            out.append(f"{path}: length {len(a)} != {len(b)}")
+        for i, (x, y) in enumerate(zip(a, b)):
+            out += diff_snapshots(x, y, f"{path}/{i}", skip)
+    elif hasattr(a, "dtype") or hasattr(b, "dtype"):
+        if not (hasattr(a, "dtype") and hasattr(b, "dtype")):
+            out.append(f"{path}: type {type(a).__name__} != "
+                       f"{type(b).__name__}")
+        else:
+            aa, bb = np.asarray(a), np.asarray(b)
+            if aa.dtype != bb.dtype:
+                out.append(f"{path}: dtype {aa.dtype} != {bb.dtype}")
+            elif aa.shape != bb.shape:
+                out.append(f"{path}: shape {aa.shape} != {bb.shape}")
+            elif not np.array_equal(aa, bb, equal_nan=True):
+                out.append(f"{path}: array values differ")
+    elif type(a) is not type(b):
+        out.append(f"{path}: type {type(a).__name__} != {type(b).__name__}")
+    elif a != b:
+        out.append(f"{path}: {a!r} != {b!r}")
+    return out

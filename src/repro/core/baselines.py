@@ -21,6 +21,7 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -69,6 +70,31 @@ class _BufferedServer:
         for it, w in zip(items, ws):
             out = tree_add(out, tree_scale(it, float(w)))
         return out
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Snapshot params, contribution buffers, participation flags and the
+        sticky per-client metadata (sizes/kappas/histograms stale-held by
+        FedNova/FedDisco). The buffered pytree ``d`` inside ``meta`` is never
+        read back, so only the scalar fields are serialized."""
+        meta = [None if m is None else
+                {"uid": int(m.uid), "kappa": int(m.kappa),
+                 "data_size": int(m.data_size), "label_hist": m.label_hist}
+                for m in self.meta]
+        return {"params": self.params, "buffer": list(self.buffer),
+                "participated": self.participated, "meta": meta}
+
+    def load_state_dict(self, sd: dict) -> None:
+        as_dev = lambda t: jax.tree.map(jnp.asarray, t)  # noqa: E731
+        self.params = as_dev(sd["params"])
+        self.buffer = [as_dev(b) for b in sd["buffer"]]
+        self.participated = np.asarray(sd["participated"], bool)
+        self.meta = [None if m is None else ClientUpdate(
+            uid=int(m["uid"]), d=None, kappa=int(m["kappa"]),
+            data_size=int(m["data_size"]),
+            label_hist=(None if m["label_hist"] is None
+                        else np.asarray(m["label_hist"])))
+            for m in sd["meta"]]
 
 
 class FedAvgServer(_BufferedServer):
@@ -194,6 +220,25 @@ class _StackedBufferedServer:
 
     def _weighted(self, ws) -> jnp.ndarray:
         return jnp.asarray(ws, jnp.float32) @ self.buffer
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Snapshot the flat weights, the (U, N) buffer, participation flags
+        and the dense sticky-metadata arrays (loop ``meta`` semantics)."""
+        return {"w": self.w, "buffer": self.buffer,
+                "participated": self.participated,
+                "sizes": self.sizes, "kappas": self.kappas,
+                "hists": self.hists, "has_hist": self.has_hist}
+
+    def load_state_dict(self, sd: dict) -> None:
+        self.w = jnp.asarray(sd["w"])
+        self.buffer = jnp.asarray(sd["buffer"])
+        self.participated = np.asarray(sd["participated"], bool)
+        self.sizes = np.asarray(sd["sizes"], float)
+        self.kappas = np.asarray(sd["kappas"], float)
+        self.hists = (None if sd["hists"] is None
+                      else np.asarray(sd["hists"], float))
+        self.has_hist = np.asarray(sd["has_hist"], bool)
 
 
 class StackedFedAvgServer(_StackedBufferedServer):

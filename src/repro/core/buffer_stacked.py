@@ -187,3 +187,32 @@ class StackedOnlineBuffer:
         uu = np.arange(U).reshape((U,) + (1,) * (slots.ndim - 1))
         slots = jnp.asarray(slots)
         return {"x": self.state.x[uu, slots], "y": self.state.y[uu, slots]}
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Full snapshot of the cohort state: storage tensors, per-client
+        capacity/head/size pointers, staged-but-uncommitted arrivals and the
+        shift-proxy memory. Everything needed for a mid-stream resume to be
+        bit-identical, including wrap-around and over-capacity staging."""
+        s = self.state
+        return {
+            "x": s.x, "y": s.y, "cap": s.cap, "size": s.size, "head": s.head,
+            "staged_x": s.staged_x, "staged_y": s.staged_y,
+            "staged_n": s.staged_n,
+            "num_classes": int(self.num_classes),
+            "last_hist": self.last_hist,
+        }
+
+    def load_state_dict(self, sd: dict) -> None:
+        """Restore a ``state_dict`` snapshot (full overwrite; the staged
+        arrivals resume exactly where they were, committed or not)."""
+        self.state = BufState(
+            x=jnp.asarray(sd["x"]), y=jnp.asarray(sd["y"]),
+            cap=jnp.asarray(sd["cap"]), size=jnp.asarray(sd["size"]),
+            head=jnp.asarray(sd["head"]),
+            staged_x=jnp.asarray(sd["staged_x"]),
+            staged_y=jnp.asarray(sd["staged_y"]),
+            staged_n=jnp.asarray(sd["staged_n"]))
+        self.num_classes = int(sd["num_classes"])
+        lh = sd["last_hist"]
+        self.last_hist = None if lh is None else np.asarray(lh)

@@ -87,6 +87,30 @@ class OSAFLServer:
         self.params = tree_sub(self.params, tree_scale(step, lr))
         return self.params
 
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Snapshot of everything a round mutates: params, the per-client
+        contribution buffer, participation (staleness) flags, eq. 19-21
+        scores and the stale-score carry (see repro/checkpoint)."""
+        return {"params": self.params,
+                "d_buffer": list(self.d_buffer),
+                "participated": self.participated,
+                "last_scores": np.asarray(self.last_scores),
+                "lam_next": getattr(self, "_lam_next", None),
+                "sketch_key": np.asarray(self._sketch_key)}
+
+    def load_state_dict(self, sd: dict) -> None:
+        as_dev = lambda t: jax.tree.map(jnp.asarray, t)  # noqa: E731
+        self.params = as_dev(sd["params"])
+        self.d_buffer = [as_dev(d) for d in sd["d_buffer"]]
+        self.participated = np.asarray(sd["participated"], bool)
+        self.last_scores = np.asarray(sd["last_scores"])
+        if sd.get("lam_next") is not None:
+            self._lam_next = np.asarray(sd["lam_next"])
+        else:
+            self.__dict__.pop("_lam_next", None)
+        self._sketch_key = jnp.asarray(sd["sketch_key"])
+
 
 class StackedOSAFLServer:
     """Vectorized Algorithm 2: the same semantics as ``OSAFLServer`` (which is
@@ -181,3 +205,22 @@ class StackedOSAFLServer:
         d_new, active = scatter_updates(self.codec, updates, self.U)
         self.round_stacked(jnp.asarray(d_new), active)
         return self.params
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Flat-vector counterpart of ``OSAFLServer.state_dict``: the global
+        weights, the (U, N) contribution buffer, participation flags and both
+        score vectors (current + stale-score carry)."""
+        return {"w": self.w, "d_buffer": self.d_buffer,
+                "participated": self.participated,
+                "last_scores": np.asarray(self.last_scores),
+                "lam_prev": self._lam_prev,
+                "sketch_key": np.asarray(self._sketch_key)}
+
+    def load_state_dict(self, sd: dict) -> None:
+        self.w = jnp.asarray(sd["w"])
+        self.d_buffer = jnp.asarray(sd["d_buffer"])
+        self.participated = jnp.asarray(np.asarray(sd["participated"], bool))
+        self.last_scores = np.asarray(sd["last_scores"])
+        self._lam_prev = jnp.asarray(sd["lam_prev"])
+        self._sketch_key = jnp.asarray(sd["sketch_key"])

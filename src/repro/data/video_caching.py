@@ -157,6 +157,30 @@ class RequestStream:
                 ys.append(fid)
         return np.stack(xs), np.array(ys, np.int64)
 
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Everything a draw mutates: the stream's Generator position, the
+        sliding-window feature/history carry, and the user's Markov state.
+        The Catalog and the static UserModel fields are reconstructed
+        deterministically from the population seed, so they are not stored.
+        Only the last SEQ_LEN+1 history entries are ever read by a draw, so
+        the snapshot stays O(1) per client however long the run."""
+        from repro.checkpoint.run_state import generator_state
+        return {"rng": generator_state(self.rng),
+                "last_feat": self._last_feat,
+                "history": [int(h) for h in self._history[-SEQ_LEN - 1:]],
+                "genre": int(self.user._genre),
+                "file": int(self.user._file)}
+
+    def load_state_dict(self, sd: dict) -> None:
+        from repro.checkpoint.run_state import set_generator_state
+        set_generator_state(self.rng, sd["rng"])
+        lf = sd["last_feat"]
+        self._last_feat = None if lf is None else np.asarray(lf, np.float32)
+        self._history = [int(h) for h in sd["history"]]
+        self.user._genre = int(sd["genre"])
+        self.user._file = int(sd["file"])
+
 
 def make_population(seed: int, num_users: int, topk: int = 1
                     ) -> Tuple[Catalog, List[RequestStream]]:

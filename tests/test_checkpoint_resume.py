@@ -1,0 +1,419 @@
+"""Checkpoint/restore of full online-run state: resume determinism.
+
+The headline invariant (acceptance bar of the checkpoint PR): for both FL
+engines, "run T rounds" and "run T/2 rounds -> save -> restore into freshly
+built objects -> run T/2 more" produce BIT-IDENTICAL params, scores, buffer
+contents (incl. FIFO pointers and staged arrivals), Generator stream
+positions and per-round eval metrics. Verified by comparing the end-of-run
+RunState snapshots of both trajectories leaf by leaf with rtol=0 atol=0.
+
+Also here: hypothesis property tests (tests/_hyp.py shim) for snapshot
+round-trips of arbitrary buffer wrap/over-capacity/staged states, and the
+failure paths of the checkpoint package (structure/dtype mismatch, missing
+sidecar, future snapshot-format versions).
+"""
+import json
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import dataclasses
+
+from benchmarks.common import (ALL_ALGS, checkpoint_path,
+                               resume_smoke_config, run_experiment,
+                               run_vectorized_experiment)
+from repro import checkpoint
+from repro.checkpoint import CheckpointError, diff_snapshots
+from repro.core.buffer import OnlineBuffer
+from repro.core.buffer_stacked import StackedOnlineBuffer
+from repro.models.small import init_small
+
+from _hyp import given, settings, st
+
+_RUNNERS = {"loop": run_experiment, "stacked": run_vectorized_experiment}
+_cfg = resume_smoke_config       # one run shape, shared with the CI smoke
+
+
+def _assert_tree_equal(a, b, skip=("round_s",)):
+    """Bit-exact equality of two snapshot trees (wall-clock timings excluded
+    by default — they are the only legitimately divergent leaves)."""
+    diffs = diff_snapshots(a, b, skip=skip)
+    assert not diffs, diffs
+
+
+def _assert_resume_bit_exact(tmp_path, engine, alg, rounds=6):
+    runner = _RUNNERS[engine]
+    da, db = tmp_path / "full", tmp_path / "split"
+    half = rounds // 2
+    full = runner(alg, _cfg(rounds), eval_samples=64,
+                  save_every_k=rounds, checkpoint_dir=da)
+    runner(alg, _cfg(half), eval_samples=64,
+           save_every_k=half, checkpoint_dir=db)
+    resumed = runner(alg, _cfg(rounds), eval_samples=64,
+                     save_every_k=half, checkpoint_dir=db,
+                     resume_from=checkpoint_path(db, half))
+    # per-round eval metrics: exact equality, full history present
+    assert [h["round"] for h in resumed] == list(range(rounds))
+    for h_full, h_res in zip(full, resumed):
+        for k in ("round", "test_loss", "test_acc", "participants"):
+            assert h_full[k] == h_res[k], (engine, alg, k, h_full, h_res)
+    sa = checkpoint.load_run_state(checkpoint_path(da, rounds))
+    sb = checkpoint.load_run_state(checkpoint_path(db, rounds))
+    # acceptance bar stated explicitly: params and scores at rtol=0 atol=0
+    if "w" in sa["server"]:
+        np.testing.assert_allclose(sb["server"]["w"], sa["server"]["w"],
+                                   rtol=0, atol=0)
+    else:
+        for la, lb in zip(jax.tree.leaves(sa["server"]["params"]),
+                          jax.tree.leaves(sb["server"]["params"])):
+            np.testing.assert_allclose(lb, la, rtol=0, atol=0)
+    if "last_scores" in sa["server"]:
+        np.testing.assert_allclose(sb["server"]["last_scores"],
+                                   sa["server"]["last_scores"],
+                                   rtol=0, atol=0)
+    # ... and then everything — buffers, pointers, staged arrivals, RNG
+    # stream positions, staleness flags, metric history — bit-exact
+    _assert_tree_equal(sa, sb)
+
+
+@pytest.mark.parametrize("engine,alg", [("loop", "osafl"),
+                                        ("stacked", "osafl"),
+                                        ("stacked", "fednova")])
+def test_resume_determinism(tmp_path, engine, alg):
+    """Mid-stream save/restore reproduces the uninterrupted trajectory
+    bit-exactly for both engines (default-suite acceptance criterion)."""
+    _assert_resume_bit_exact(tmp_path, engine, alg)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", ["loop", "stacked"])
+@pytest.mark.parametrize("alg", ALL_ALGS)
+def test_resume_determinism_full_matrix(tmp_path, engine, alg):
+    """Full cross-engine x algorithm resume matrix (slow tier)."""
+    _assert_resume_bit_exact(tmp_path, engine, alg)
+
+
+def test_resume_after_multiple_interruptions(tmp_path):
+    """Chained resumes (2 interruptions) still match the uninterrupted run."""
+    da, db = tmp_path / "full", tmp_path / "split"
+    full = run_vectorized_experiment("osafl", _cfg(6), eval_samples=64,
+                                     save_every_k=6, checkpoint_dir=da)
+    run_vectorized_experiment("osafl", _cfg(2), eval_samples=64,
+                              save_every_k=2, checkpoint_dir=db)
+    run_vectorized_experiment("osafl", _cfg(4), eval_samples=64,
+                              save_every_k=2, checkpoint_dir=db,
+                              resume_from=checkpoint_path(db, 2))
+    resumed = run_vectorized_experiment("osafl", _cfg(6), eval_samples=64,
+                                        save_every_k=2, checkpoint_dir=db,
+                                        resume_from=checkpoint_path(db, 4))
+    for h_full, h_res in zip(full, resumed):
+        assert h_full["test_loss"] == h_res["test_loss"]
+        assert h_full["test_acc"] == h_res["test_acc"]
+        assert h_full["participants"] == h_res["participants"]
+    _assert_tree_equal(checkpoint.load_run_state(checkpoint_path(da, 6)),
+                       checkpoint.load_run_state(checkpoint_path(db, 6)))
+
+
+# ---------------------------------------------------------------------------
+# snapshot round-trips of arbitrary buffer states (property tests)
+# ---------------------------------------------------------------------------
+
+def _fill(oracles, sbuf, counts_list, num_classes, counter=0):
+    """Stage one burst per entry of counts_list into oracle + stacked buffers
+    (committing after each), returning the running unique-sample counter."""
+    U = len(oracles)
+    for counts in counts_list:
+        A = int(max(max(counts), 1))
+        feat = oracles[0].x.shape[1:]
+        xs = np.zeros((U, A) + feat, np.float32)
+        ys = np.zeros((U, A), np.int64)
+        for u, n in enumerate(counts):
+            if n == 0:
+                continue
+            x = np.zeros((n,) + feat, np.float32)
+            x[:, 0] = np.arange(counter, counter + n)
+            y = (np.arange(counter, counter + n) % num_classes)
+            counter += n
+            oracles[u].stage(x, y)
+            xs[u, :n], ys[u, :n] = x, y
+        sbuf.stage(xs, ys, np.asarray(counts))
+        for b in oracles:
+            b.commit()
+        sbuf.commit()
+    return counter
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 9), st.integers(2, 9),
+       st.lists(st.integers(0, 12), min_size=1, max_size=6),
+       st.integers(0, 6))
+def test_buffer_snapshot_roundtrip_arbitrary_states(cap0, cap1, bursts,
+                                                    tail):
+    """Snapshot -> save -> load -> restore round-trips arbitrary buffer
+    states bit-exactly: wrapped heads, size == capacity, over-capacity
+    commits, and staged-but-uncommitted arrivals — and the restored buffers
+    continue in exact lockstep with the originals."""
+    C = 7
+    caps = np.array([cap0, cap1])
+    oracles = [OnlineBuffer.create(int(c), (2,), C) for c in caps]
+    sbuf = StackedOnlineBuffer.create(caps, (2,), C, stage_capacity=14)
+    counts_list = [(n, (2 * n + 1) % 13) for n in bursts]
+    counter = _fill(oracles, sbuf, counts_list, C)
+    # a staged-but-uncommitted tail burst, asymmetric across clients
+    tail_counts = (tail, (tail + 3) % 7)
+    A = int(max(max(tail_counts), 1))
+    xs = np.zeros((2, A, 2), np.float32)
+    ys = np.zeros((2, A), np.int64)
+    for u, n in enumerate(tail_counts):
+        if n:
+            xs[u, :n, 0] = np.arange(counter, counter + n)
+            ys[u, :n] = np.arange(counter, counter + n) % C
+            oracles[u].stage(xs[u, :n], ys[u, :n])
+            counter += n
+    sbuf.stage(xs, ys, np.asarray(tail_counts))
+
+    with tempfile.TemporaryDirectory() as d:
+        state = {"stacked": sbuf.state_dict(),
+                 "oracles": [b.state_dict() for b in oracles]}
+        checkpoint.save_run_state(d + "/snap", state)
+        loaded = checkpoint.load_run_state(d + "/snap")
+
+    sbuf2 = StackedOnlineBuffer.create(caps, (2,), C, stage_capacity=14)
+    sbuf2.load_state_dict(loaded["stacked"])
+    oracles2 = [OnlineBuffer.create(int(c), (2,), C) for c in caps]
+    for b, sd in zip(oracles2, loaded["oracles"]):
+        b.load_state_dict(sd)
+
+    # round-trip is bit-exact, including the uncommitted staging area
+    _assert_tree_equal(sbuf.state_dict(), sbuf2.state_dict(), skip=())
+    for b, b2 in zip(oracles, oracles2):
+        _assert_tree_equal(b.state_dict(), b2.state_dict(), skip=())
+
+    # the staged tail commits identically on originals and restored copies
+    for bufs in (oracles, oracles2):
+        for b in bufs:
+            b.commit()
+    sbuf.commit()
+    sbuf2.commit()
+    for u in range(2):
+        ox, oy = oracles[u].dataset()
+        for restored in (sbuf, sbuf2):
+            rx, ry = restored.dataset(u)
+            assert np.array_equal(ox, rx) and np.array_equal(oy, ry)
+        r2x, r2y = oracles2[u].dataset()
+        assert np.array_equal(ox, r2x) and np.array_equal(oy, r2y)
+        assert oracles[u].size == oracles2[u].size == sbuf2.sizes[u]
+        assert oracles[u].head == oracles2[u].head == sbuf2.heads[u]
+
+
+# ---------------------------------------------------------------------------
+# RunState codec + Generator streams
+# ---------------------------------------------------------------------------
+
+def test_run_state_roundtrip_mixed_tree(tmp_path):
+    state = {"i": 3, "f": 0.25, "b": True, "none": None, "s": "osafl",
+             "big": 2 ** 97 + 13,          # PCG64 state words are 128-bit
+             "f16": np.arange(6, dtype=np.float16).reshape(2, 3),
+             "bools": np.array([True, False]),
+             "nested": [{"k": np.int64(5)}, [1.5, None, "x"]],
+             "dev": jnp.ones((3,), jnp.float32)}
+    checkpoint.save_run_state(tmp_path / "s", state,
+                              metadata={"note": "mixed"})
+    out = checkpoint.load_run_state(tmp_path / "s")
+    assert out["i"] == 3 and out["f"] == 0.25 and out["b"] is True
+    assert out["none"] is None and out["s"] == "osafl"
+    assert out["big"] == 2 ** 97 + 13
+    assert out["f16"].dtype == np.float16
+    np.testing.assert_array_equal(out["f16"], state["f16"])
+    assert out["bools"].dtype == np.bool_
+    assert out["nested"][0]["k"] == 5
+    assert out["nested"][1] == [1.5, None, "x"]
+    assert out["dev"].dtype == np.float32
+    np.testing.assert_array_equal(out["dev"], np.ones(3))
+
+
+def test_run_state_overwrite_is_atomic_and_clean(tmp_path):
+    """Re-saving at the same path replaces the snapshot and leaves no temp
+    files behind (saves go through temp + os.replace so an interrupted save
+    can never tear a previously valid snapshot)."""
+    checkpoint.save_run_state(tmp_path / "s", {"x": np.arange(3)})
+    checkpoint.save_run_state(tmp_path / "s", {"x": np.arange(5)})
+    out = checkpoint.load_run_state(tmp_path / "s")
+    np.testing.assert_array_equal(out["x"], np.arange(5))
+    leftovers = [p.name for p in tmp_path.iterdir()
+                 if p.name.startswith(".tmp.")]
+    assert leftovers == []
+
+
+def test_run_state_missing_array_key_raises_checkpoint_error(tmp_path):
+    """A sidecar/npz mismatch (torn or mixed-up save) surfaces as
+    CheckpointError naming the key, not a bare KeyError."""
+    checkpoint.save_run_state(tmp_path / "s", {"x": np.arange(3)})
+    mp = tmp_path / "s.meta.json"
+    meta = json.loads(mp.read_text())
+    meta["tree"]["x"] = {"__array__": "s/gone"}
+    mp.write_text(json.dumps(meta))
+    with pytest.raises(CheckpointError, match="s/gone"):
+        checkpoint.load_run_state(tmp_path / "s")
+
+
+def test_run_state_rejects_unserializable(tmp_path):
+    with pytest.raises(CheckpointError, match="cannot serialize"):
+        checkpoint.save_run_state(tmp_path / "s", {"bad": object()})
+    with pytest.raises(CheckpointError, match="reserved"):
+        checkpoint.save_run_state(tmp_path / "s", {"__array__": 1})
+    with pytest.raises(CheckpointError, match="strings"):
+        checkpoint.save_run_state(tmp_path / "s", {"d": {1: 2}})
+
+
+def test_generator_state_roundtrip_mid_stream():
+    rng = np.random.default_rng(7)
+    rng.normal(size=5)                      # advance mid-stream
+    snap = checkpoint.generator_state(rng)
+    expect = rng.normal(size=8)
+    fresh = np.random.default_rng(0)
+    checkpoint.set_generator_state(fresh, snap)
+    np.testing.assert_array_equal(expect, fresh.normal(size=8))
+    # the snapshot survives a JSON round-trip (that's how it is persisted)
+    fresh2 = np.random.default_rng(0)
+    checkpoint.set_generator_state(fresh2, json.loads(json.dumps(snap)))
+    np.testing.assert_array_equal(expect, fresh2.normal(size=8))
+
+
+# ---------------------------------------------------------------------------
+# failure paths: structure/dtype mismatch, sidecar, format versions
+# ---------------------------------------------------------------------------
+
+def test_restore_reports_missing_and_extra_keys(tmp_path):
+    params = {"a": np.zeros(3, np.float32), "b": np.ones(2, np.float32)}
+    checkpoint.save(tmp_path / "p", params)
+    like = {"a": np.zeros(3, np.float32), "c": np.zeros(2, np.float32)}
+    with pytest.raises(CheckpointError) as ei:
+        checkpoint.restore(tmp_path / "p", like)
+    msg = str(ei.value)
+    assert "missing" in msg and "c" in msg
+    assert "extra" in msg and "b" in msg
+
+
+def test_restore_reports_dtype_mismatch(tmp_path):
+    params = {"a": np.zeros(3, np.float32)}
+    checkpoint.save(tmp_path / "p", params)
+    like = {"a": np.zeros(3, np.float64)}
+    with pytest.raises(CheckpointError, match="dtype"):
+        checkpoint.restore(tmp_path / "p", like)
+
+
+def test_restore_missing_file(tmp_path):
+    with pytest.raises(CheckpointError, match="not found"):
+        checkpoint.restore(tmp_path / "nope", {"a": np.zeros(1)})
+
+
+def test_load_metadata_missing_sidecar(tmp_path):
+    with pytest.raises(CheckpointError, match="sidecar"):
+        checkpoint.load_metadata(tmp_path / "nope")
+
+
+def test_params_checkpoint_still_roundtrips_without_sidecar(tmp_path):
+    """Legacy checkpoints (bare npz, no sidecar) keep loading."""
+    params = init_small(jax.random.PRNGKey(0), "mlp")
+    checkpoint.save(tmp_path / "p", params, step=3)
+    (tmp_path / "p.meta.json").unlink()
+    restored = checkpoint.restore(tmp_path / "p", params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _bump_version(meta_file, version):
+    meta = json.loads(meta_file.read_text())
+    meta["format_version"] = version
+    meta_file.write_text(json.dumps(meta))
+
+
+def test_future_params_version_fails_loudly(tmp_path):
+    params = {"a": np.zeros(3, np.float32)}
+    checkpoint.save(tmp_path / "p", params)
+    _bump_version(tmp_path / "p.meta.json", checkpoint.FORMAT_VERSION + 1)
+    with pytest.raises(CheckpointError, match="format_version"):
+        checkpoint.restore(tmp_path / "p", params)
+    # the '.npz'-suffixed path form resolves to the same sidecar and is
+    # version-checked too
+    with pytest.raises(CheckpointError, match="format_version"):
+        checkpoint.restore(str(tmp_path / "p") + ".npz", params)
+    with pytest.raises(CheckpointError, match="format_version"):
+        checkpoint.load_metadata(tmp_path / "p")
+
+
+def test_future_run_state_version_fails_loudly(tmp_path):
+    checkpoint.save_run_state(tmp_path / "s", {"x": np.arange(3)})
+    _bump_version(tmp_path / "s.meta.json", checkpoint.FORMAT_VERSION + 1)
+    with pytest.raises(CheckpointError, match="format_version"):
+        checkpoint.load_run_state(tmp_path / "s")
+
+
+def test_legacy_npz_suffixed_sidecar_still_found(tmp_path):
+    """Pre-RunState saves appended '.meta.json' to the caller's path
+    verbatim, so '.npz'-suffixed saves left the sidecar at
+    '<file>.npz.meta.json' — both locations must keep loading, with the
+    version check applied there too."""
+    params = {"a": np.zeros(3, np.float32)}
+    checkpoint.save(tmp_path / "p.npz", params, step=4)
+    (tmp_path / "p.meta.json").rename(tmp_path / "p.npz.meta.json")
+    assert checkpoint.load_metadata(tmp_path / "p.npz")["step"] == 4
+    assert checkpoint.load_metadata(tmp_path / "p")["step"] == 4
+    _bump_version(tmp_path / "p.npz.meta.json",
+                  checkpoint.FORMAT_VERSION + 1)
+    with pytest.raises(CheckpointError, match="format_version"):
+        checkpoint.restore(tmp_path / "p.npz", params)
+
+
+def test_run_state_rejects_params_checkpoint(tmp_path):
+    """A params-only checkpoint is not silently reinterpreted as RunState."""
+    checkpoint.save(tmp_path / "p", {"a": np.zeros(3, np.float32)})
+    with pytest.raises(CheckpointError, match="params"):
+        checkpoint.load_run_state(tmp_path / "p")
+
+
+# ---------------------------------------------------------------------------
+# harness guard rails
+# ---------------------------------------------------------------------------
+
+def test_resume_rejects_mismatched_run_shape(tmp_path):
+    xc = _cfg(1, num_clients=4)
+    run_vectorized_experiment("osafl", xc, eval_samples=16,
+                              save_every_k=1, checkpoint_dir=tmp_path)
+    ck = checkpoint_path(tmp_path, 1)
+    with pytest.raises(CheckpointError, match="resume"):   # engine mismatch
+        run_experiment("osafl", _cfg(2, num_clients=4), eval_samples=16,
+                       resume_from=ck)
+    with pytest.raises(CheckpointError, match="resume"):   # alg mismatch
+        run_vectorized_experiment("fedavg", _cfg(2, num_clients=4),
+                                  eval_samples=16, resume_from=ck)
+    with pytest.raises(CheckpointError, match="resume"):   # cohort mismatch
+        run_vectorized_experiment("osafl", _cfg(2, num_clients=5),
+                                  eval_samples=16, resume_from=ck)
+    with pytest.raises(CheckpointError, match="seed"):     # seed mismatch
+        run_vectorized_experiment(
+            "osafl", dataclasses.replace(_cfg(2, num_clients=4), seed=99),
+            eval_samples=16, resume_from=ck)
+    with pytest.raises(CheckpointError, match="model"):    # model mismatch
+        run_vectorized_experiment(
+            "osafl",
+            dataclasses.replace(_cfg(2, num_clients=4), model="lstm"),
+            eval_samples=16, resume_from=ck)
+    with pytest.raises(CheckpointError, match="eval_samples"):
+        run_vectorized_experiment("osafl", _cfg(2, num_clients=4),
+                                  eval_samples=32, resume_from=ck)
+
+
+def test_save_every_k_and_checkpoint_dir_must_pair(tmp_path):
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        run_vectorized_experiment("osafl", _cfg(1, num_clients=4),
+                                  eval_samples=16, save_every_k=1)
+    # the inverse — a checkpoint_dir that would silently never be written —
+    # is rejected too
+    with pytest.raises(ValueError, match="save_every_k"):
+        run_vectorized_experiment("osafl", _cfg(1, num_clients=4),
+                                  eval_samples=16, checkpoint_dir=tmp_path)

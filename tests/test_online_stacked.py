@@ -166,6 +166,71 @@ def test_stacked_buffer_stage_capacity_guard():
                    np.zeros((1, 3), np.int64), np.array([3]))
 
 
+def test_stacked_buffer_oracle_parity_after_restore(tmp_path):
+    """Save/restore at adversarial states — head wrapped past zero, size ==
+    capacity, staged-but-uncommitted arrivals — then keep streaming: the
+    restored stacked buffer stays in exact lockstep with restored oracles
+    (checkpointing must not perturb FIFO semantics)."""
+    from repro import checkpoint
+
+    rng = np.random.default_rng(21)
+    U, C, feat = 3, 6, (2,)
+    caps = np.array([3, 5, 8])
+    oracles = [OnlineBuffer.create(int(c), feat, C) for c in caps]
+    sbuf = StackedOnlineBuffer.create(caps, feat, C, stage_capacity=16)
+
+    def burst(counts, commit=True, counter=[0]):
+        A = int(max(max(counts), 1))
+        xs = np.zeros((U, A) + feat, np.float32)
+        ys = np.zeros((U, A), np.int64)
+        for u, n in enumerate(counts):
+            if n == 0:
+                continue
+            x = np.zeros((n,) + feat, np.float32)
+            x[:, 0] = np.arange(counter[0], counter[0] + n)
+            y = rng.integers(0, C, size=n)
+            counter[0] += n
+            oracles[u].stage(x, y)
+            xs[u, :n], ys[u, :n] = x, y
+        sbuf.stage(xs, ys, np.asarray(counts))
+        if commit:
+            for b in oracles:
+                b.commit()
+            sbuf.commit()
+
+    burst((7, 3, 8))     # client 0 over-capacity (head wraps), client 2 full
+    burst((1, 2, 0))     # client 0 wraps again, client 1 exactly at capacity
+    burst((1, 4, 2), commit=False)   # staged-but-uncommitted arrivals
+    assert sbuf.heads[0] > 0                      # wrapped
+    assert sbuf.sizes[1] == caps[1] == 5          # size == capacity
+    assert np.asarray(sbuf.state.staged_n).sum() == 7   # staged, uncommitted
+
+    ck = tmp_path / "adversarial"
+    checkpoint.save_run_state(ck, {
+        "stacked": sbuf.state_dict(),
+        "oracles": [b.state_dict() for b in oracles]})
+    loaded = checkpoint.load_run_state(ck)
+    sbuf = StackedOnlineBuffer.create(caps, feat, C, stage_capacity=16)
+    sbuf.load_state_dict(loaded["stacked"])
+    oracles = [OnlineBuffer.create(int(c), feat, C) for c in caps]
+    for b, sd in zip(oracles, loaded["oracles"]):
+        b.load_state_dict(sd)
+
+    # the staged tail commits on the restored copies, then 5 more rounds
+    for b in oracles:
+        b.commit()
+    sbuf.commit()
+    _assert_state_matches(oracles, sbuf, "post-restore")
+    for rnd in range(5):
+        counts = tuple(int(n) for n in rng.integers(0, 2 * caps.max(),
+                                                    size=U))
+        burst(counts)
+        _assert_state_matches(oracles, sbuf, rnd)
+        np.testing.assert_allclose(
+            np.stack([b.label_histogram() for b in oracles]),
+            sbuf.label_histograms(), atol=1e-6)
+
+
 def test_stacked_buffer_sampling_hits_live_window_only():
     rng = np.random.default_rng(3)
     caps = np.array([5, 9, 7])

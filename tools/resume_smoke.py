@@ -1,0 +1,69 @@
+"""CI save/resume smoke: 6 rounds on the vectorized online harness.
+
+Runs the stacked engine uninterrupted for 6 rounds, then again as
+3 rounds -> RunState snapshot -> resume -> 3 rounds, and fails (exit 1) on
+any per-round metric divergence or any non-identical leaf in the end-of-run
+snapshots (wall-clock timings excluded). This is the cheap tier-1 guard in
+front of the full resume-determinism suite (tests/test_checkpoint_resume.py;
+the cross-engine x algorithm matrix runs under ``-m slow``).
+
+Usage: PYTHONPATH=src python tools/resume_smoke.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.common import (checkpoint_path,  # noqa: E402
+                               resume_smoke_config,
+                               run_vectorized_experiment)
+from repro import checkpoint  # noqa: E402
+from repro.checkpoint import diff_snapshots  # noqa: E402
+
+ROUNDS, HALF = 6, 3
+METRICS = ("round", "test_loss", "test_acc", "participants")
+_cfg = resume_smoke_config
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory() as da, \
+            tempfile.TemporaryDirectory() as db:
+        full = run_vectorized_experiment("osafl", _cfg(ROUNDS),
+                                         eval_samples=64,
+                                         save_every_k=ROUNDS,
+                                         checkpoint_dir=da)
+        run_vectorized_experiment("osafl", _cfg(HALF), eval_samples=64,
+                                  save_every_k=HALF, checkpoint_dir=db)
+        resumed = run_vectorized_experiment(
+            "osafl", _cfg(ROUNDS), eval_samples=64, save_every_k=HALF,
+            checkpoint_dir=db, resume_from=checkpoint_path(db, HALF))
+        bad = False
+        for h_full, h_res in zip(full, resumed):
+            line = " ".join(f"{k}={h_full[k]}" for k in METRICS)
+            diverged = [k for k in METRICS if h_full[k] != h_res[k]]
+            if diverged:
+                bad = True
+                line += "  DIVERGED: " + ", ".join(
+                    f"{k} {h_full[k]!r} != {h_res[k]!r}" for k in diverged)
+            print(line)
+        diffs = diff_snapshots(
+            checkpoint.load_run_state(checkpoint_path(da, ROUNDS)),
+            checkpoint.load_run_state(checkpoint_path(db, ROUNDS)))
+        for d in diffs:
+            print("state mismatch:", d)
+        if bad or diffs:
+            print("resume smoke FAILED")
+            return 1
+    print(f"resume smoke OK: {ROUNDS}-round run == {HALF}+resume+{HALF}, "
+          "metrics and final RunState bit-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
