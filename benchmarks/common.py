@@ -25,6 +25,7 @@ from repro.data.online import (binomial_arrivals_batched, dataset_layout,
                                draw_arrival_batch, load_streams_state,
                                pad_arrival_batch, streams_state_dict)
 from repro.data.video_caching import make_population
+from repro.data.video_caching_stacked import StackedRequestStream
 from repro.models.small import REGISTRY, init_small, small_loss
 
 MODEL_PARAMS = {"fcn": 3_900_000, "cnn": 1_100_000, "squeezenet": 740_000,
@@ -65,10 +66,19 @@ def _run_shape(xc: "ExperimentConfig", eval_samples: int) -> dict:
 
 def _check_snapshot(snap: dict, engine: str, alg: str,
                     xc: "ExperimentConfig", eval_samples: int) -> None:
-    """A snapshot is only resumable into the exact run shape it came from."""
+    """A snapshot is only resumable into the exact run shape it came from.
+    Config fields added after a snapshot was written are absent from its
+    saved config; such a run behaved like the field's default, so the
+    default is what the snapshot is compared as (keeps pre-existing
+    checkpoints resumable when ExperimentConfig grows)."""
     got = dict(snap.get("config") or {}, engine=snap.get("engine"),
                alg=snap.get("alg"))
     want = dict(_run_shape(xc, eval_samples), engine=engine, alg=alg)
+    base = dataclasses.asdict(ExperimentConfig())
+    for k in want:                  # _run_shape owns which fields compare
+        if k not in got and k in base:
+            got[k] = (list(base[k]) if isinstance(base[k], tuple)
+                      else base[k])
     bad = sorted(k for k in set(got) | set(want)
                  if got.get(k) != want.get(k))
     if bad:
@@ -106,6 +116,9 @@ class ExperimentConfig:
     topk: int = 1                     # K (request-model randomness)
     seed: int = 0
     use_resource_opt: bool = True
+    request_backend: str = "python"   # python (per-user oracle streams) |
+                                      # stacked (batched Gumbel-trick sampler,
+                                      # vectorized harness only)
     cell_radius_m: float = 600.0      # milder than Fig.3's 1 km so the
                                       # reduced-round runs see participants
 
@@ -126,6 +139,11 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400,
     k-th round; ``resume_from`` restores one and continues the trajectory
     bit-identically (tests/test_checkpoint_resume.py)."""
     _validate_ckpt_args(save_every_k, checkpoint_dir)
+    if xc.request_backend != "python":
+        raise ValueError(
+            "run_experiment is the per-client oracle harness and only "
+            "supports request_backend='python'; the stacked Gumbel sampler "
+            f"needs run_vectorized_experiment (got {xc.request_backend!r})")
     model = xc.model
     cat, streams = make_population(xc.seed, xc.num_clients, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)
@@ -230,11 +248,24 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     mid-stream resume (the setup below re-derives everything deterministic
     from ``xc.seed`` — population, capacities, test set, system params — and
     the snapshot then overwrites all mutable state).
+
+    ``xc.request_backend`` picks the request model: ``"python"`` draws from
+    the per-user oracle streams (the last O(U) Python loop per round);
+    ``"stacked"`` advances all U users at once with the jitted Gumbel-trick
+    sampler (``data/video_caching_stacked.py``, distribution-equivalent —
+    see DESIGN.md "Request model"). Both backends share the same population
+    parameters, capacities, arrival process and system params per seed.
     """
     _validate_ckpt_args(save_every_k, checkpoint_dir)
+    if xc.request_backend not in ("python", "stacked"):
+        raise ValueError(f"unknown request_backend {xc.request_backend!r} "
+                         "(expected 'python' or 'stacked')")
+    stacked_req = xc.request_backend == "stacked"
     model = xc.model
     U = xc.num_clients
     cat, streams = make_population(xc.seed, U, topk=xc.topk)
+    rstream = (StackedRequestStream.from_streams(cat, streams, seed=xc.seed)
+               if stacked_req else None)
     rng = np.random.default_rng(xc.seed)
     feat_shape, dtype = dataset_layout(xc.dataset)
     lo, hi = xc.capacity
@@ -244,24 +275,39 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     # initial fill: FIFO commits compose, so ingest the cap_u seed samples
     # in arrival-width chunks rather than sizing the staging area (kept for
     # the whole run) for caps.max()
-    init = [_draw(s, int(c), xc.dataset) for s, c in zip(streams, caps)]
-    for off in range(0, int(caps.max()), xc.arrivals):
-        chunk = [(x[off:off + xc.arrivals], y[off:off + xc.arrivals])
-                 if off < len(y) else None for x, y in init]
-        sbuf.stage(*pad_arrival_batch(chunk, xc.arrivals, xc.dataset))
-        sbuf.commit()
+    if stacked_req:
+        filled = np.zeros(U, np.int64)
+        while (filled < caps).any():
+            chunk = np.minimum(caps - filled, xc.arrivals)
+            sbuf.stage(*rstream.draw(chunk, xc.dataset, xc.arrivals))
+            sbuf.commit()
+            filled += chunk
+    else:
+        init = [_draw(s, int(c), xc.dataset) for s, c in zip(streams, caps)]
+        for off in range(0, int(caps.max()), xc.arrivals):
+            chunk = [(x[off:off + xc.arrivals], y[off:off + xc.arrivals])
+                     if off < len(y) else None for x, y in init]
+            sbuf.stage(*pad_arrival_batch(chunk, xc.arrivals, xc.dataset))
+            sbuf.commit()
     p_ac = np.array([s.user.p_ac for s in streams])
 
     per = max(eval_samples // U, 4)
-    tests = [_draw(s, per, xc.dataset) for s in streams]
-    test_batch = {"x": jnp.asarray(np.concatenate([t[0] for t in tests])),
-                  "y": jnp.asarray(np.concatenate([t[1] for t in tests]))}
+    if stacked_req:
+        ex, ey, _ = rstream.draw(np.full(U, per), xc.dataset, per)
+        test_batch = {"x": ex.reshape((U * per,) + ex.shape[2:]),
+                      "y": ey.reshape(U * per)}
+    else:
+        tests = [_draw(s, per, xc.dataset) for s in streams]
+        test_batch = {
+            "x": jnp.asarray(np.concatenate([t[0] for t in tests])),
+            "y": jnp.asarray(np.concatenate([t[1] for t in tests]))}
 
     grad_fn = jax.grad(lambda p, b: small_loss(p, b, model)[0])
     params = init_small(jax.random.PRNGKey(xc.seed), model)
     glr = xc.global_lr if alg in ("osafl", "afa_cd") else 1.0
     fl = FLConfig(num_clients=U, local_lr=xc.local_lr, global_lr=glr,
-                  algorithm=alg, engine="stacked")
+                  algorithm=alg, engine="stacked",
+                  request_backend=xc.request_backend)
     server = make_server(params, fl, U, seed=xc.seed)
     codec = server.codec
 
@@ -282,14 +328,23 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
         checkpoint.set_generator_state(rng, snap["rng"])
         server.load_state_dict(snap["server"])
         sbuf.load_state_dict(snap["buffer"])
-        load_streams_state(streams, snap["streams"])
+        if stacked_req:
+            rstream.load_state_dict(snap["streams"])
+        else:
+            load_streams_state(streams, snap["streams"])
         history = list(snap["history"])
         start_round = int(snap["next_round"])
     for t in range(start_round, xc.rounds):
         t_start = time.perf_counter()
         counts = binomial_arrivals_batched(rng, xc.arrivals, p_ac)
-        sbuf.stage(*draw_arrival_batch(streams, counts, xc.dataset,
-                                       width=xc.arrivals))
+        if stacked_req:
+            arrivals = rstream.draw(counts, xc.dataset, xc.arrivals)
+            jax.block_until_ready(arrivals[1])   # honest request_gen_s
+        else:
+            arrivals = draw_arrival_batch(streams, counts, xc.dataset,
+                                          width=xc.arrivals)
+        req_s = time.perf_counter() - t_start
+        sbuf.stage(*arrivals)
         sbuf.commit()
         if xc.use_resource_opt:
             dec = optimize_round_batched(rng, net, sysb, n_params)
@@ -315,6 +370,7 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
         history.append({"round": t, "test_loss": float(loss),
                         "test_acc": float(m["accuracy"]),
                         "participants": int(active.sum()),
+                        "request_gen_s": req_s,
                         "round_s": time.perf_counter() - t_start})
         if save_every_k and (t + 1) % save_every_k == 0:
             checkpoint.save_run_state(
@@ -324,7 +380,8 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
                  "rng": checkpoint.generator_state(rng),
                  "server": server.state_dict(),
                  "buffer": sbuf.state_dict(),
-                 "streams": streams_state_dict(streams),
+                 "streams": (rstream.state_dict() if stacked_req
+                             else streams_state_dict(streams)),
                  "history": history},
                 metadata={"engine": "stacked", "alg": alg, "round": t + 1})
     return history
@@ -332,6 +389,11 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
 
 def run_centralized_sgd(xc: ExperimentConfig, eval_samples: int = 400):
     """Genie baseline: all clients' current datasets pooled each round."""
+    if xc.request_backend != "python":
+        raise ValueError(
+            "run_centralized_sgd draws from the per-client oracle streams "
+            f"and only supports request_backend='python' "
+            f"(got {xc.request_backend!r})")
     model = xc.model
     cat, streams = make_population(xc.seed, xc.num_clients, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)

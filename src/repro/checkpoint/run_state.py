@@ -184,38 +184,62 @@ def check_version(meta: dict, path, expect_kind: str = None) -> None:
             f"(format_version {ver!r})")
 
 
+_SAVE_ID_KEY = "__save_id__"
+
+
 def save_run_state(path, state, metadata: dict = None) -> None:
-    """Write a nested run-state tree as ``path[.npz]`` + ``.meta.json``."""
+    """Write a nested run-state tree as ``path[.npz]`` + ``.meta.json``.
+
+    Each file is written atomically, and the *pair* carries a shared random
+    save id (an npz entry + a sidecar field): overwriting an existing
+    snapshot cannot silently publish a new array file next to a stale
+    sidecar (or vice versa) if the process dies between the two replaces —
+    consecutive snapshots of one run share identical tree paths, so without
+    the id such a torn pair would decode without error."""
     arrays: Dict[str, np.ndarray] = {}
     tree = _encode(state, arrays, "s")
+    save_id = f"{np.random.SeedSequence().entropy:032x}"
+    arrays[_SAVE_ID_KEY] = np.array(save_id)
     npz = _npz_path(path)
     npz.parent.mkdir(parents=True, exist_ok=True)
     atomic_write(npz, lambda tmp: np.savez(tmp, **arrays))
     atomic_write(meta_path(path), lambda tmp: tmp.write_text(json.dumps(
         {"format_version": FORMAT_VERSION, "kind": "run_state",
-         "tree": tree, "metadata": metadata or {}})))
+         "save_id": save_id, "tree": tree, "metadata": metadata or {}})))
 
 
 def load_run_state(path):
     """Read a ``save_run_state`` snapshot back into nested plain structures
-    (dicts / lists / scalars / np arrays). Version-checked."""
+    (dicts / lists / scalars / np arrays). Version-checked; a mismatched
+    npz/sidecar pair (interrupted overwrite) raises ``CheckpointError``."""
     meta = read_sidecar(path)
     check_version(meta, path, expect_kind="run_state")
     npz = _npz_path(path)
     if not npz.exists():
         raise CheckpointError(f"checkpoint array file {npz} not found")
     with np.load(npz) as data:
-        return _decode(meta["tree"], dict(data.items()))
+        data = dict(data.items())
+    sid = meta.get("save_id")
+    got = data.pop(_SAVE_ID_KEY, None)
+    # a pre-save_id snapshot has the id on neither side; any single-sided or
+    # mismatched id means the pair mixes two saves
+    if (sid is None) != (got is None) or (sid is not None
+                                          and str(got) != sid):
+        raise CheckpointError(
+            f"checkpoint {path} is torn: the array file and the sidecar "
+            "come from different saves (interrupted overwrite?)")
+    return _decode(meta["tree"], data)
 
 
 def diff_snapshots(a, b, path: str = "s",
-                   skip: Tuple[str, ...] = ("round_s",)) -> List[str]:
+                   skip: Tuple[str, ...] = ("round_s", "request_gen_s"),
+                   ) -> List[str]:
     """Bit-exact recursive comparison of two loaded snapshot trees; returns
     difference descriptions (empty list == identical). ``skip`` names dict
-    keys excluded everywhere — by default the wall-clock timings, the only
-    legitimately divergent leaves between an uninterrupted run and a
-    save/resume run. Shared by tests/test_checkpoint_resume.py and the CI
-    smoke tools/resume_smoke.py."""
+    keys excluded everywhere — by default the wall-clock timings (whole-round
+    and request-generation), the only legitimately divergent leaves between
+    an uninterrupted run and a save/resume run. Shared by
+    tests/test_checkpoint_resume.py and the CI smoke tools/resume_smoke.py."""
     out: List[str] = []
     if isinstance(a, dict) and isinstance(b, dict):
         for k in sorted(set(a) | set(b)):

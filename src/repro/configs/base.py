@@ -208,6 +208,14 @@ class FLConfig:
     score_backend: str = "kernel"     # stacked engine scoring: kernel (fused
                                       # Pallas scored_reduce) | reference
                                       # (pure-jnp kernels/ref.py oracle)
+    request_backend: str = "python"   # request model: python (per-user
+                                      # data/video_caching.py oracle streams)
+                                      # | stacked (batched Gumbel-trick
+                                      # data/video_caching_stacked.py,
+                                      # stacked engine only). Applied at the
+                                      # data layer by the cohort harness
+                                      # (benchmarks/common.py), recorded
+                                      # here; servers never consult it.
     literal_init_buffer: bool = False # Algorithm 2's literal d[u]=w^t/eta for
                                       # never-participated clients (equivalent
                                       # to treating their model as 0; unstable

@@ -1,12 +1,16 @@
 """Host-side bridge from the per-user request streams to the stacked online
 pipeline (paper Section II-A at cohort scale).
 
-The request model (``video_caching.RequestStream``) is inherently stateful
-and per-user, so the arrival *samples* are drawn in Python; everything after
-that — staging, FIFO commit, batch gathers — is jitted array work on the
-``(U, A, ...)`` rectangular layout these helpers produce. Arrival *counts*
-are the paper's Binomial(E_u, p_ac) (``binomial_arrivals_batched``, the
-whole-cohort twin of ``core/buffer.py::binomial_arrivals``).
+With ``request_backend="python"`` the arrival *samples* are drawn per user
+from the stateful oracle streams (``video_caching.RequestStream``) and these
+helpers pack them into the ``(U, A, ...)`` rectangular layout the jitted
+staging/commit/gather ops consume. With ``request_backend="stacked"`` the
+samples themselves are produced on device in that exact layout by the
+batched Gumbel-trick sampler
+(``data/video_caching_stacked.py::StackedRequestStream``) and this bridge is
+bypassed. Arrival *counts* are the paper's Binomial(E_u, p_ac) either way
+(``binomial_arrivals_batched``, the whole-cohort twin of
+``core/buffer.py::binomial_arrivals``).
 """
 from __future__ import annotations
 

@@ -16,10 +16,21 @@ Dataset-2 sample: last L=10 content IDs -> next content ID.
 
 The paper uses CIFAR-100 class features for x_ft; offline we substitute fixed
 random per-file features (same shapes) — recorded in EXPERIMENTS.md.
+
+This module is the **per-user oracle** of the request model: the loop harness
+(`benchmarks/common.py::run_experiment`) consumes it directly, and
+`data/online.py` bridges it into the stacked online pipeline when
+`request_backend="python"`. Its cohort-scale twin — all U users advanced per
+slot by one jitted Gumbel-trick program — is
+`data/video_caching_stacked.py::StackedRequestStream`
+(`request_backend="stacked"`), which is distribution-parity-tested against
+the classes here in `tests/test_request_stacked.py` (see DESIGN.md "Request
+model").
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -49,11 +60,22 @@ class Catalog:
         return cls(feats, pop, cos)
 
 
-def zipf_mandelbrot_pmf(n: int, gamma: float = 1.2, q: float = 2.0
-                        ) -> np.ndarray:
+@lru_cache(maxsize=None)
+def _zipf_mandelbrot_cached(n: int, gamma: float, q: float) -> np.ndarray:
     ranks = np.arange(1, n + 1, dtype=np.float64)
     w = 1.0 / (ranks + q) ** gamma
-    return w / w.sum()
+    pmf = w / w.sum()
+    pmf.setflags(write=False)       # shared across all users — keep immutable
+    return pmf
+
+
+def zipf_mandelbrot_pmf(n: int, gamma: float = 1.2, q: float = 2.0
+                        ) -> np.ndarray:
+    """Zipf-Mandelbrot popularity pmf over ranks 1..n. The pmf only depends
+    on (n, gamma, q), which are population-wide constants, so it is computed
+    once and shared (read-only) — every first/explore draw used to rebuild
+    it. The stacked sampler caches the log-pmf the same way at build time."""
+    return _zipf_mandelbrot_cached(int(n), float(gamma), float(q))
 
 
 @dataclass

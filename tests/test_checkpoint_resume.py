@@ -37,22 +37,28 @@ _RUNNERS = {"loop": run_experiment, "stacked": run_vectorized_experiment}
 _cfg = resume_smoke_config       # one run shape, shared with the CI smoke
 
 
-def _assert_tree_equal(a, b, skip=("round_s",)):
+def _assert_tree_equal(a, b, skip=("round_s", "request_gen_s")):
     """Bit-exact equality of two snapshot trees (wall-clock timings excluded
     by default — they are the only legitimately divergent leaves)."""
     diffs = diff_snapshots(a, b, skip=skip)
     assert not diffs, diffs
 
 
-def _assert_resume_bit_exact(tmp_path, engine, alg, rounds=6):
+def _assert_resume_bit_exact(tmp_path, engine, alg, rounds=6,
+                             request_backend="python"):
     runner = _RUNNERS[engine]
+
+    def cfg(r):
+        return dataclasses.replace(_cfg(r),
+                                   request_backend=request_backend)
+
     da, db = tmp_path / "full", tmp_path / "split"
     half = rounds // 2
-    full = runner(alg, _cfg(rounds), eval_samples=64,
+    full = runner(alg, cfg(rounds), eval_samples=64,
                   save_every_k=rounds, checkpoint_dir=da)
-    runner(alg, _cfg(half), eval_samples=64,
+    runner(alg, cfg(half), eval_samples=64,
            save_every_k=half, checkpoint_dir=db)
-    resumed = runner(alg, _cfg(rounds), eval_samples=64,
+    resumed = runner(alg, cfg(rounds), eval_samples=64,
                      save_every_k=half, checkpoint_dir=db,
                      resume_from=checkpoint_path(db, half))
     # per-round eval metrics: exact equality, full history present
@@ -86,6 +92,14 @@ def test_resume_determinism(tmp_path, engine, alg):
     """Mid-stream save/restore reproduces the uninterrupted trajectory
     bit-exactly for both engines (default-suite acceptance criterion)."""
     _assert_resume_bit_exact(tmp_path, engine, alg)
+
+
+def test_resume_determinism_stacked_request_backend(tmp_path):
+    """The batched Gumbel request model checkpoints its device-array state
+    (PRNG key, Markov state, window carries) through the same RunState path
+    and resumes bit-exactly too."""
+    _assert_resume_bit_exact(tmp_path, "stacked", "osafl",
+                             request_backend="stacked")
 
 
 @pytest.mark.slow
@@ -248,6 +262,37 @@ def test_run_state_overwrite_is_atomic_and_clean(tmp_path):
     assert leftovers == []
 
 
+def test_torn_snapshot_pair_detected(tmp_path):
+    """An overwrite interrupted between the two atomic replaces leaves the
+    new npz next to the old sidecar; because consecutive snapshots of one
+    run share identical tree paths this used to decode silently — the
+    shared save id now rejects the mixed pair."""
+    checkpoint.save_run_state(tmp_path / "s", {"x": np.arange(3)})
+    stale_sidecar = (tmp_path / "s.meta.json").read_text()
+    checkpoint.save_run_state(tmp_path / "s", {"x": np.arange(3) + 7})
+    (tmp_path / "s.meta.json").write_text(stale_sidecar)
+    with pytest.raises(CheckpointError, match="different saves"):
+        checkpoint.load_run_state(tmp_path / "s")
+    # one-sided case: a *pre-save_id* stale sidecar next to a new npz is
+    # the same tear and must not slip through the legacy allowance ...
+    meta = json.loads(stale_sidecar)
+    del meta["save_id"]
+    (tmp_path / "s.meta.json").write_text(json.dumps(meta))
+    with pytest.raises(CheckpointError, match="different saves"):
+        checkpoint.load_run_state(tmp_path / "s")
+    # ... while a fully legacy snapshot (id on neither side) still loads
+    checkpoint.save_run_state(tmp_path / "legacy", {"x": np.arange(4)})
+    mp = tmp_path / "legacy.meta.json"
+    meta = json.loads(mp.read_text())
+    del meta["save_id"]
+    mp.write_text(json.dumps(meta))
+    with np.load(tmp_path / "legacy.npz") as data:
+        arrays = {k: v for k, v in data.items() if k != "__save_id__"}
+    np.savez(tmp_path / "legacy.npz", **arrays)
+    out = checkpoint.load_run_state(tmp_path / "legacy")
+    np.testing.assert_array_equal(out["x"], np.arange(4))
+
+
 def test_run_state_missing_array_key_raises_checkpoint_error(tmp_path):
     """A sidecar/npz mismatch (torn or mixed-up save) surfaces as
     CheckpointError naming the key, not a bare KeyError."""
@@ -406,6 +451,30 @@ def test_resume_rejects_mismatched_run_shape(tmp_path):
     with pytest.raises(CheckpointError, match="eval_samples"):
         run_vectorized_experiment("osafl", _cfg(2, num_clients=4),
                                   eval_samples=32, resume_from=ck)
+
+
+def test_resume_accepts_snapshot_predating_new_config_fields(tmp_path):
+    """Config fields added after a snapshot was written (e.g. PR 4's
+    request_backend) are absent from its saved config; the run that wrote
+    it behaved like the default, so resume must treat it as the default
+    instead of refusing every pre-existing checkpoint."""
+    xc = _cfg(2, num_clients=4)
+    run_vectorized_experiment("osafl", xc, eval_samples=16,
+                              save_every_k=1, checkpoint_dir=tmp_path)
+    ck = checkpoint_path(tmp_path, 1)
+    mp = checkpoint.meta_path(ck)
+    meta = json.loads(mp.read_text())
+    removed = meta["tree"]["config"].pop("request_backend")
+    assert removed == "python"
+    mp.write_text(json.dumps(meta))
+    resumed = run_vectorized_experiment("osafl", xc, eval_samples=16,
+                                        resume_from=ck)
+    assert [h["round"] for h in resumed] == [0, 1]
+    # a non-default run still refuses the legacy snapshot
+    with pytest.raises(CheckpointError, match="request_backend"):
+        run_vectorized_experiment(
+            "osafl", dataclasses.replace(xc, request_backend="stacked"),
+            eval_samples=16, resume_from=ck)
 
 
 def test_save_every_k_and_checkpoint_dir_must_pair(tmp_path):

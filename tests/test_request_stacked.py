@@ -1,0 +1,400 @@
+"""Distribution parity of the batched Gumbel-trick request model.
+
+The stacked sampler (``data/video_caching_stacked.py``) must be
+*stream-equivalent in distribution* to the per-user oracle
+(``data/video_caching.py``): every decision branch of Algorithm 5 has an
+exact analytic pmf computable from the catalog + user parameters, and the
+stacked draws are chi-squared-tested against it per branch at a fixed
+Markov state (first request / exploit / explore), plus the exploit-vs-
+explore branch frequency at the eps boundary values. Chain-level behaviour
+is compared against the scalar oracle on per-chain statistics (iid across
+chains — labels *within* one sticky chain are dependent, so pooled-label
+chi-squared tests would be anti-conservative).
+
+Also here: structural parity (sliding windows, Dataset-1 feature rows,
+padded layout), snapshot round-trips of the stacked stream through the
+RunState codec (hypothesis), and the ``request_backend="stacked"`` harness
+smoke + guard rails.
+
+All tests are fixed-seed and therefore deterministic; the chi-squared
+acceptance thresholds (p > 1e-3) were checked against a seed sweep
+(p-values consistent with Uniform[0,1], no systematic bias).
+"""
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro import checkpoint
+from repro.checkpoint import CheckpointError
+from repro.data.video_caching import (Catalog, D1_DIM, F_FILES,
+                                      FILES_PER_GENRE, G_GENRES,
+                                      RequestStream, SEQ_LEN, UserModel,
+                                      dataset1_sample, make_population,
+                                      zipf_mandelbrot_pmf)
+from repro.data.video_caching_stacked import StackedRequestStream
+
+try:                                           # scipy: exact chi2 p-values
+    from scipy import stats as _scipy_stats
+except ImportError:                            # pragma: no cover
+    _scipy_stats = None
+
+
+# ---------------------------------------------------------------------------
+# chi-squared helpers (scipy when available, Wilson-Hilferty fallback)
+# ---------------------------------------------------------------------------
+
+def _chi2_ok(f_obs, f_exp, alpha=1e-3) -> bool:
+    """Pearson chi-squared goodness-of-fit at significance ``alpha``."""
+    f_obs, f_exp = np.asarray(f_obs, float), np.asarray(f_exp, float)
+    f_exp = f_exp * (f_obs.sum() / f_exp.sum())
+    stat = float(np.sum((f_obs - f_exp) ** 2 / f_exp))
+    k = len(f_obs) - 1
+    if _scipy_stats is not None:
+        return _scipy_stats.chi2.sf(stat, k) > alpha
+    # Wilson-Hilferty: chi2_{1-alpha}(k) ~= k (1 - 2/(9k) + z sqrt(2/(9k)))^3
+    z = 3.0902                                  # Phi^-1(1 - 1e-3)
+    crit = k * (1 - 2 / (9 * k) + z * np.sqrt(2 / (9 * k))) ** 3
+    return stat <= crit
+
+
+def _assert_pmf_match(pmf, labels, n):
+    """Chi-squared of observed label counts vs an analytic pmf, with
+    low-expectation cells lumped (standard validity rule E >= 5)."""
+    obs = np.bincount(labels, minlength=F_FILES).astype(float)
+    exp = pmf * n
+    assert obs[exp == 0].sum() == 0, "draw outside the branch support"
+    big = exp >= 5
+    f_obs = np.concatenate([obs[big], [obs[~big].sum()]])
+    f_exp = np.concatenate([exp[big], [exp[~big].sum()]])
+    keep = f_exp > 0
+    assert _chi2_ok(f_obs[keep], f_exp[keep])
+
+
+# ---------------------------------------------------------------------------
+# fixed-state cohorts: U independent copies of one user at one Markov state
+# ---------------------------------------------------------------------------
+
+_RNG = np.random.default_rng(0)
+CAT = Catalog.create(_RNG)
+USER = UserModel.create(_RNG, topk=3)          # K=3: exploit draw is random
+
+
+def _clone_cohort(U, genre, file, eps=None, topk=None, warm_hist=True):
+    """U scalar streams with identical user parameters pinned at one Markov
+    state (the per-branch pmfs condition on exactly this)."""
+    streams = []
+    for u in range(U):
+        um = UserModel(genre_pref=USER.genre_pref.copy(),
+                       eps=USER.eps if eps is None else eps,
+                       p_ac=USER.p_ac,
+                       topk=USER.topk if topk is None else topk)
+        um._genre, um._file = genre, file
+        s = RequestStream(CAT, um, np.random.default_rng(u))
+        if warm_hist:
+            s._history = [0] * SEQ_LEN          # ds2 emits from step one
+        streams.append(s)
+    return streams
+
+
+def _one_draw(streams, seed):
+    """One request per user via the stacked sampler; returns (U,) labels."""
+    stk = StackedRequestStream.from_streams(CAT, streams, seed=seed)
+    _, ys, _ = stk.draw_dataset2(np.ones(len(streams), int), 1)
+    return np.asarray(ys)[:, 0]
+
+
+N_COHORT = 6000
+
+
+def test_first_request_pmf():
+    """First request: genre ~ Cat(pref), then Zipf-Mandelbrot through the
+    genre's popularity order (Algorithm 5 lines 1-2)."""
+    z = zipf_mandelbrot_pmf(FILES_PER_GENRE)
+    pmf = np.zeros(F_FILES)
+    for g in range(G_GENRES):
+        for r in range(FILES_PER_GENRE):
+            pmf[g * FILES_PER_GENRE + CAT.popularity[g][r]] += \
+                USER.genre_pref[g] * z[r]
+    labels = _one_draw(_clone_cohort(N_COHORT, -1, -1), seed=7)
+    _assert_pmf_match(pmf, labels, N_COHORT)
+
+
+def _exploit_pmf(user, f0):
+    """The oracle's exploit branch pmf: re-normalized softmax over the
+    top-K most-similar same-genre files, current file excluded."""
+    g0 = f0 // FILES_PER_GENRE
+    lo = g0 * FILES_PER_GENRE
+    members = np.arange(lo, lo + FILES_PER_GENRE)
+    members = members[members != f0]
+    sims = CAT.cos_sim[f0, members]
+    probs = np.exp(sims - sims.max())
+    probs /= probs.sum()
+    order = np.argsort(-probs)[:user.topk]
+    pmf = np.zeros(F_FILES)
+    pmf[members[order]] = probs[order] / probs[order].sum()
+    return pmf
+
+
+def test_exploit_pmf_topk():
+    """Exploit branch (eps=1 pins it): support is exactly the top-K
+    most-similar same-genre files and the draw follows the re-normalized
+    softmax."""
+    g0, f0 = 2, 47
+    labels = _one_draw(_clone_cohort(N_COHORT, g0, f0, eps=1.0), seed=18)
+    _assert_pmf_match(_exploit_pmf(USER, f0), labels, N_COHORT)
+
+
+def test_exploit_topk1_is_argmax():
+    """K=1 degenerates to the deterministic most-similar file — both the
+    oracle and the Gumbel draw (argmax over a single candidate)."""
+    g0, f0 = 1, 33
+    streams = _clone_cohort(256, g0, f0, eps=1.0, topk=1)
+    labels = _one_draw(streams, seed=4)
+    expect = streams[0].user.next_request(np.random.default_rng(0), CAT)
+    assert np.all(labels == expect)
+
+
+def test_explore_pmf():
+    """Explore branch (eps=0 pins it): genre ~ Cat(pref | not current),
+    then Zipf-Mandelbrot — the current genre is never drawn."""
+    g0, f0 = 2, 47
+    z = zipf_mandelbrot_pmf(FILES_PER_GENRE)
+    others = [g for g in range(G_GENRES) if g != g0]
+    pref = USER.genre_pref[others]
+    pref = pref / pref.sum()
+    pmf = np.zeros(F_FILES)
+    for gg, pg in zip(others, pref):
+        for r in range(FILES_PER_GENRE):
+            pmf[gg * FILES_PER_GENRE + CAT.popularity[gg][r]] += pg * z[r]
+    labels = _one_draw(_clone_cohort(N_COHORT, g0, f0, eps=0.0), seed=9)
+    lo = g0 * FILES_PER_GENRE
+    assert np.all((labels < lo) | (labels >= lo + FILES_PER_GENRE))
+    _assert_pmf_match(pmf, labels, N_COHORT)
+
+
+@pytest.mark.parametrize("eps", [0.4, 0.9])
+def test_branch_frequency_at_eps_bounds(eps):
+    """P(exploit) == eps at the boundary values of the paper's eps_u range.
+    Exploit always stays in the current genre and explore always leaves it,
+    so the branch is read off the genre transition."""
+    g0, f0 = 2, 47
+    labels = _one_draw(_clone_cohort(N_COHORT, g0, f0, eps=eps),
+                       seed=10)
+    stay = int((labels // FILES_PER_GENRE == g0).sum())
+    assert _chi2_ok([stay, N_COHORT - stay],
+                    [eps * N_COHORT, (1 - eps) * N_COHORT])
+
+
+def test_chain_level_statistics_match_oracle():
+    """Whole-chain comparison vs the scalar oracle on per-chain statistics
+    (iid across chains): same-genre transition counts and distinct-file
+    counts agree (Mann-Whitney), and the independent first labels agree
+    (chi-squared two-sample)."""
+    if _scipy_stats is None:                    # pragma: no cover
+        pytest.skip("chain-level rank tests need scipy")
+    C, n = 400, 12
+
+    def fresh(u):
+        return RequestStream(CAT, UserModel(
+            genre_pref=USER.genre_pref.copy(), eps=USER.eps, p_ac=USER.p_ac,
+            topk=USER.topk), np.random.default_rng(5000 + u))
+
+    scalar = np.stack([fresh(u).draw_dataset2(n)[1] for u in range(C)])
+    stk = StackedRequestStream.from_streams(
+        CAT, [fresh(u) for u in range(C)], seed=42)
+    _, ys, _ = stk.draw_dataset2(np.full(C, n), n)
+    stacked = np.asarray(ys)
+
+    def same_genre(y):
+        g = y // FILES_PER_GENRE
+        return (g[:, 1:] == g[:, :-1]).sum(1)
+
+    def distinct(y):
+        return np.array([len(set(row)) for row in y])
+
+    assert _scipy_stats.mannwhitneyu(
+        same_genre(scalar), same_genre(stacked)).pvalue > 1e-3
+    assert _scipy_stats.mannwhitneyu(
+        distinct(scalar), distinct(stacked)).pvalue > 1e-3
+    a = np.bincount(scalar[:, 0], minlength=F_FILES)
+    b = np.bincount(stacked[:, 0], minlength=F_FILES)
+    big = (a + b) >= 8
+    tbl = np.stack([np.concatenate([a[big], [a[~big].sum()]]),
+                    np.concatenate([b[big], [b[~big].sum()]])]).astype(float)
+    tbl = tbl[:, tbl.sum(0) > 0]
+    assert _scipy_stats.chi2_contingency(tbl).pvalue > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# structural parity: layouts, sliding windows, Dataset-1 features
+# ---------------------------------------------------------------------------
+
+def test_padded_layout_and_ranges():
+    cat, streams = make_population(1, 8)
+    stk = StackedRequestStream.from_streams(cat, streams, seed=2)
+    counts = np.array([3, 0, 2, 5, 5, 1, 4, 5])
+    xs, ys, c = stk.draw_dataset2(counts, 5)
+    assert xs.shape == (8, 5, SEQ_LEN) and ys.shape == (8, 5)
+    assert np.array_equal(c, counts)
+    ys = np.asarray(ys)
+    assert np.all((ys >= 0) & (ys < F_FILES))
+    xs1, ys1, _ = stk.draw_dataset1(counts, 5)
+    assert xs1.shape == (8, 5, D1_DIM)
+    for u, n in enumerate(counts):              # rows past counts are padding
+        assert np.all(np.asarray(ys1)[u, n:] == 0)
+        assert np.all(np.asarray(xs1)[u, n:] == 0)
+    with pytest.raises(ValueError, match="pad width"):
+        stk.draw_dataset2(np.full(8, 6), 5)
+    with pytest.raises(ValueError, match="width"):
+        stk.draw_dataset2(counts, 0)
+    with pytest.raises(ValueError, match="counts shape"):
+        stk.draw_dataset2(np.ones(5, int), 5)
+
+
+def test_dataset2_windows_slide():
+    """Within one user's stream, consecutive Dataset-2 samples satisfy the
+    oracle's construction: window_{i+1} = window_i[1:] + [label_i]."""
+    cat, streams = make_population(2, 6)
+    stk = StackedRequestStream.from_streams(cat, streams, seed=3)
+    stk.draw_dataset2(np.full(6, 4), 4)          # consume the warm-up
+    xs, ys, _ = stk.draw_dataset2(np.full(6, 6), 6)
+    x, y = np.asarray(xs), np.asarray(ys)
+    for u in range(6):
+        for i in range(5):
+            assert list(x[u, i + 1]) == list(x[u, i][1:]) + [y[u, i]]
+
+
+def test_dataset1_features_match_oracle_construction():
+    """Every emitted Dataset-1 feature row is exactly ``dataset1_sample`` of
+    the previous request (the sliding-window pairing), bit-for-bit up to
+    f32 rounding."""
+    cat, streams = make_population(3, 5)
+    stk = StackedRequestStream.from_streams(cat, streams, seed=5)
+    xs, ys, _ = stk.draw_dataset1(np.full(5, 6), 6)
+    x, y = np.asarray(xs), np.asarray(ys)
+    for u in range(5):
+        for i in range(5):
+            ref = dataset1_sample(cat, streams[u].user, int(y[u, i]))
+            np.testing.assert_allclose(x[u, i + 1], ref,
+                                       rtol=1e-6, atol=1e-6)
+
+
+def test_zero_counts_freeze_markov_state():
+    """Users with no arrivals this round must not advance their Markov
+    chain (the oracle draws nothing for them)."""
+    cat, streams = make_population(4, 6)
+    stk = StackedRequestStream.from_streams(cat, streams, seed=6)
+    stk.draw_dataset2(np.full(6, 3), 3)
+    before = {k: np.asarray(v) for k, v in stk.state_dict().items()}
+    stk.draw_dataset2(np.zeros(6, int), 3)
+    after = stk.state_dict()
+    for k in before:
+        if k == "key":                          # the cohort key advances
+            continue
+        np.testing.assert_array_equal(before[k], np.asarray(after[k]))
+
+
+def test_zipf_pmf_is_cached_and_readonly():
+    """Satellite bugfix: the pmf used to be rebuilt on every explore/first
+    draw; now it is one shared read-only array per (n, gamma, q)."""
+    a = zipf_mandelbrot_pmf(20)
+    assert a is zipf_mandelbrot_pmf(20, gamma=1.2, q=2.0)
+    assert not a.flags.writeable
+    assert a is not zipf_mandelbrot_pmf(20, gamma=1.3)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trips (RunState codec)
+# ---------------------------------------------------------------------------
+
+_CKPT_CAT, _CKPT_STREAMS = make_population(9, 4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([1, 2]), st.lists(st.integers(0, 4), min_size=1,
+                                         max_size=4), st.integers(0, 4))
+def test_stream_snapshot_roundtrip(dataset, bursts, tail):
+    """snapshot -> save_run_state -> load -> restore onto a *differently
+    seeded* fresh stream: the restored stream continues in bit-exact
+    lockstep with the original (draws and state)."""
+    s1 = StackedRequestStream.from_streams(_CKPT_CAT, _CKPT_STREAMS, seed=3)
+    U = s1.num_users
+    for n in bursts:
+        counts = np.array([(n + u) % 5 for u in range(U)])
+        s1.draw(counts, dataset, 4)
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save_run_state(d + "/s", {"stream": s1.state_dict()})
+        loaded = checkpoint.load_run_state(d + "/s")
+    s2 = StackedRequestStream.from_streams(_CKPT_CAT, _CKPT_STREAMS, seed=77)
+    s2.load_state_dict(loaded["stream"])
+    for k, v in s1.state_dict().items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(s2.state_dict()[k]), k)
+    counts = np.array([(tail + u) % 5 for u in range(U)])
+    x1, y1, _ = s1.draw(counts, dataset, 4)
+    x2, y2, _ = s2.draw(counts, dataset, 4)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    for k, v in s1.state_dict().items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(s2.state_dict()[k]), k)
+
+
+# ---------------------------------------------------------------------------
+# harness integration: smoke + guard rails
+# ---------------------------------------------------------------------------
+
+def test_stacked_backend_harness_smoke_u64():
+    """Tier-1 smoke (ISSUE acceptance): the stacked request backend runs the
+    full vectorized online harness end-to-end for 3 rounds at U=64."""
+    from benchmarks.common import ExperimentConfig, run_vectorized_experiment
+    xc = ExperimentConfig(model="mlp", dataset=2, num_clients=64, rounds=3,
+                          seed=3, request_backend="stacked")
+    hist = run_vectorized_experiment("osafl", xc, eval_samples=64)
+    assert len(hist) == 3
+    for h in hist:
+        assert np.isfinite(h["test_loss"])
+        assert 0 <= h["participants"] <= 64
+        assert h["request_gen_s"] > 0
+    assert hist[-1]["participants"] > 0
+
+
+def test_stacked_backend_harness_smoke_dataset1():
+    from benchmarks.common import ExperimentConfig, run_vectorized_experiment
+    xc = ExperimentConfig(model="fcn", dataset=1, num_clients=8, rounds=2,
+                          capacity=(12, 24), arrivals=4, batch=8, seed=5,
+                          request_backend="stacked")
+    hist = run_vectorized_experiment("osafl", xc, eval_samples=32)
+    assert len(hist) == 2 and np.isfinite(hist[-1]["test_loss"])
+
+
+def test_request_backend_guard_rails(tmp_path):
+    """The loop harness is the python-stream oracle (stacked refused), an
+    unknown backend is refused, and a snapshot cannot resume into a
+    different request backend (it is part of the run shape)."""
+    from benchmarks.common import (ExperimentConfig, checkpoint_path,
+                                   run_centralized_sgd, run_experiment,
+                                   run_vectorized_experiment)
+    xc = ExperimentConfig(model="mlp", dataset=2, num_clients=4, rounds=1,
+                          capacity=(12, 24), arrivals=4, batch=8, seed=5,
+                          request_backend="stacked")
+    with pytest.raises(ValueError, match="request_backend"):
+        run_experiment("osafl", xc, eval_samples=16)
+    with pytest.raises(ValueError, match="request_backend"):
+        run_centralized_sgd(xc, eval_samples=16)
+    with pytest.raises(ValueError, match="request_backend"):
+        run_vectorized_experiment(
+            "osafl", dataclasses.replace(xc, request_backend="np"),
+            eval_samples=16)
+    run_vectorized_experiment("osafl", xc, eval_samples=16,
+                              save_every_k=1, checkpoint_dir=tmp_path)
+    with pytest.raises(CheckpointError, match="request_backend"):
+        run_vectorized_experiment(
+            "osafl",
+            dataclasses.replace(xc, rounds=2, request_backend="python"),
+            eval_samples=16, resume_from=checkpoint_path(tmp_path, 1))
