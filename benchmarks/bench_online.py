@@ -24,12 +24,23 @@ Three measurements:
     and its per-round ``request_gen_s`` field is reported as a column.
 
 Usage: PYTHONPATH=src python benchmarks/bench_online.py [U] [rounds]
+           [--smoke] [--json PATH]
+
+``--smoke`` is the CI bench-gate mode: U = 256 with the minimum round
+counts, the 10x pipeline / 10x request-gen acceptance bars, plus a >= 4x
+end-to-end harness-round bar (the measured steady state is ~9x; the slack
+absorbs noisy shared runners). ``--json`` writes the three measurement
+dicts to a file — CI uploads it as a per-PR workflow artifact so the
+speedups are tracked, not just gated.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
 import sys
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -177,9 +188,17 @@ def bench_harness(U: int = 256, rounds: int = 3, model: str = "mlp",
             "speedup_stacked_req": t_loop / t_vec_st}
 
 
-if __name__ == "__main__":
-    U = int(sys.argv[1]) if len(sys.argv) > 1 else 256
-    rounds = int(sys.argv[2]) if len(sys.argv) > 2 else 3
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("U", nargs="?", type=int, default=256)
+    ap.add_argument("rounds", nargs="?", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI bench-gate mode: U=256, minimum rounds, all "
+                         "speedup bars enforced (incl. >= 4x harness round)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the measurement dicts to PATH (CI artifact)")
+    args = ap.parse_args()
+    U, rounds = (256, 2) if args.smoke else (args.U, args.rounds)
     p = bench_pipeline(U, max(rounds, 3))
     print(f"U={U} online pipeline (arrivals+optimizer+OSAFL round): "
           f"loop {p['loop_s']*1e3:.0f} ms vs vectorized "
@@ -197,11 +216,24 @@ if __name__ == "__main__":
     print(f"U={U} in-harness request_gen_s column: "
           f"python {rg['python']*1e3:.1f} ms, "
           f"stacked {rg['stacked']*1e3:.2f} ms per round")
+    if args.json:
+        Path(args.json).write_text(json.dumps(
+            {"pipeline": p, "request_gen": g, "harness": h,
+             "smoke": args.smoke}, indent=2, default=float))
+        print(f"wrote measurements -> {args.json}")
     if U < 256:                  # the acceptance bars are defined at U=256
         print("done (speedup bars only gated at U >= 256)")
     elif p["speedup"] < 10:
         raise SystemExit("FAIL: vectorized online pipeline speedup < 10x")
     elif g["speedup"] < 10:
         raise SystemExit("FAIL: stacked request generation speedup < 10x")
+    elif args.smoke and h["speedup_stacked_req"] < 4:
+        raise SystemExit("FAIL: end-to-end harness round speedup < 4x "
+                         f"(got {h['speedup_stacked_req']:.1f}x)")
     else:
-        print("PASS: pipeline >= 10x, request generation >= 10x")
+        print("PASS: pipeline >= 10x, request generation >= 10x"
+              + (", harness round >= 4x" if args.smoke else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ import dataclasses
 import time
 from dataclasses import dataclass
 from pathlib import Path
+from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +20,12 @@ from repro.core.buffer import OnlineBuffer, binomial_arrivals
 from repro.core.buffer_stacked import StackedOnlineBuffer
 from repro.core.client import local_train, make_vmapped_local_train
 from repro.core.osafl import ClientUpdate
+from repro.core.pod import (make_fedavg_train_step, make_pod_batch_fn,
+                            make_recompute_train_step,
+                            make_stale_score_train_step, make_tp_train_step)
 from repro.core.resource import (NetworkConfig, make_clients, optimize_round)
 from repro.core.resource_stacked import optimize_round_batched, stack_clients
+from repro.core.shmap import client_rows
 from repro.data.online import (binomial_arrivals_batched, dataset_layout,
                                draw_arrival_batch, load_streams_state,
                                pad_arrival_batch, streams_state_dict)
@@ -65,15 +70,19 @@ def _run_shape(xc: "ExperimentConfig", eval_samples: int) -> dict:
 
 
 def _check_snapshot(snap: dict, engine: str, alg: str,
-                    xc: "ExperimentConfig", eval_samples: int) -> None:
+                    xc: "ExperimentConfig", eval_samples: int,
+                    extra: dict = None) -> None:
     """A snapshot is only resumable into the exact run shape it came from.
     Config fields added after a snapshot was written are absent from its
     saved config; such a run behaved like the field's default, so the
     default is what the snapshot is compared as (keeps pre-existing
-    checkpoints resumable when ExperimentConfig grows)."""
+    checkpoints resumable when ExperimentConfig grows). ``extra`` holds
+    harness-specific shape keys outside ExperimentConfig (the pod harness's
+    engine flavor + mesh layout), compared with no default-filling."""
     got = dict(snap.get("config") or {}, engine=snap.get("engine"),
                alg=snap.get("alg"))
-    want = dict(_run_shape(xc, eval_samples), engine=engine, alg=alg)
+    want = dict(_run_shape(xc, eval_samples), engine=engine, alg=alg,
+                **(extra or {}))
     base = dataclasses.asdict(ExperimentConfig())
     for k in want:                  # _run_shape owns which fields compare
         if k not in got and k in base:
@@ -229,34 +238,16 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400,
     return history
 
 
-def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
-                              eval_samples: int = 400,
-                              save_every_k: int = None, checkpoint_dir=None,
-                              resume_from=None):
-    """Stacked-engine counterpart of ``run_experiment``: the whole cohort
-    trains under one ``jax.vmap``, the server round is one vectorized
-    (U, N)-buffer update, and the paper's full *online* setting runs in
-    stacked form too — per-client FIFO buffers with Binomial(E_u, p_ac)
-    arrivals (``StackedOnlineBuffer``, committed at round boundaries as one
-    jitted scatter) and the joint kappa/f/p resource optimizer
-    (``resource_stacked``, all clients in one jitted f64 solve). So
-    ``xc.num_clients`` can be hundreds to thousands with no loss of paper
-    fidelity; only the request streams themselves stay per-client Python.
-
-    ``save_every_k``/``checkpoint_dir``/``resume_from`` mirror
-    ``run_experiment``: full RunState snapshots every k rounds, bit-identical
-    mid-stream resume (the setup below re-derives everything deterministic
-    from ``xc.seed`` — population, capacities, test set, system params — and
-    the snapshot then overwrites all mutable state).
-
-    ``xc.request_backend`` picks the request model: ``"python"`` draws from
-    the per-user oracle streams (the last O(U) Python loop per round);
-    ``"stacked"`` advances all U users at once with the jitted Gumbel-trick
-    sampler (``data/video_caching_stacked.py``, distribution-equivalent —
-    see DESIGN.md "Request model"). Both backends share the same population
-    parameters, capacities, arrival process and system params per seed.
-    """
-    _validate_ckpt_args(save_every_k, checkpoint_dir)
+def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
+                   mesh=None, stale_scores: bool = False) -> SimpleNamespace:
+    """Deterministic run setup shared by ``run_vectorized_experiment`` and
+    ``run_pod_online_experiment``: population + request streams, capacities,
+    FIFO-buffer initial fill, eval set, params/server, system params. One
+    code path so the two harnesses consume the host RNG in exactly the same
+    order — the 1-device-mesh metric parity between them rests on it. The
+    only knobs that differ are ``mesh`` (the pod harness shards the buffer)
+    and ``stale_scores`` (the pod stale engine's server-side score lag);
+    neither touches an RNG."""
     if xc.request_backend not in ("python", "stacked"):
         raise ValueError(f"unknown request_backend {xc.request_backend!r} "
                          "(expected 'python' or 'stacked')")
@@ -271,7 +262,8 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     lo, hi = xc.capacity
     caps = rng.integers(lo, max(hi, lo + 1), size=U)
     sbuf = StackedOnlineBuffer.create(
-        caps, feat_shape, 100, stage_capacity=xc.arrivals, dtype=dtype)
+        caps, feat_shape, 100, stage_capacity=xc.arrivals, dtype=dtype,
+        mesh=mesh)
     # initial fill: FIFO commits compose, so ingest the cap_u seed samples
     # in arrival-width chunks rather than sizing the staging area (kept for
     # the whole run) for caps.max()
@@ -307,66 +299,122 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     glr = xc.global_lr if alg in ("osafl", "afa_cd") else 1.0
     fl = FLConfig(num_clients=U, local_lr=xc.local_lr, global_lr=glr,
                   algorithm=alg, engine="stacked",
-                  request_backend=xc.request_backend)
+                  request_backend=xc.request_backend,
+                  stale_scores=stale_scores)
     server = make_server(params, fl, U, seed=xc.seed)
-    codec = server.codec
-
-    local_step = make_vmapped_local_train(
-        grad_fn, fl.local_lr, fl.kappa_max,
-        prox_mu=fl.fedprox_mu if alg == "fedprox" else 0.0)
-    weights_alg = alg in ("fedavg", "fedprox", "feddisco")
 
     net = NetworkConfig()
     sysb = stack_clients(make_clients(rng, U,
                                       cell_radius_m=xc.cell_radius_m))
     n_params = MODEL_PARAMS.get(model, 1_000_000)
+    return SimpleNamespace(
+        stacked_req=stacked_req, model=model, U=U, streams=streams,
+        rstream=rstream, rng=rng, caps=caps, sbuf=sbuf, p_ac=p_ac,
+        test_batch=test_batch, grad_fn=grad_fn, fl=fl, server=server,
+        codec=server.codec,
+        weights_alg=alg in ("fedavg", "fedprox", "feddisco"),
+        prox_mu=fl.fedprox_mu if alg == "fedprox" else 0.0,
+        net=net, sysb=sysb, n_params=n_params)
+
+
+def _resume_stacked(s: SimpleNamespace, snap: dict) -> tuple:
+    """Overwrite the deterministic setup's mutable state from a RunState
+    snapshot (shared by the vectorized and pod harnesses; the caller has
+    already ``_check_snapshot``-ed it)."""
+    checkpoint.set_generator_state(s.rng, snap["rng"])
+    s.server.load_state_dict(snap["server"])
+    s.sbuf.load_state_dict(snap["buffer"])
+    if s.stacked_req:
+        s.rstream.load_state_dict(snap["streams"])
+    else:
+        load_streams_state(s.streams, snap["streams"])
+    return list(snap["history"]), int(snap["next_round"])
+
+
+def _draw_round_inputs(s: SimpleNamespace, xc: ExperimentConfig) -> tuple:
+    """One round of host-side draws, in the canonical order: arrival counts
+    + samples (staged and committed FIFO), the resource-optimizer kappas,
+    the straggler mask, and the local-SGD batch slots. Returns
+    ``(req_s, kappas, active, slots)``."""
+    t0 = time.perf_counter()
+    counts = binomial_arrivals_batched(s.rng, xc.arrivals, s.p_ac)
+    if s.stacked_req:
+        arrivals = s.rstream.draw(counts, xc.dataset, xc.arrivals)
+        jax.block_until_ready(arrivals[1])   # honest request_gen_s
+    else:
+        arrivals = draw_arrival_batch(s.streams, counts, xc.dataset,
+                                      width=xc.arrivals)
+    req_s = time.perf_counter() - t0
+    s.sbuf.stage(*arrivals)
+    s.sbuf.commit()
+    if xc.use_resource_opt:
+        kappas = optimize_round_batched(s.rng, s.net, s.sysb,
+                                        s.n_params).kappa
+    else:
+        kappas = np.full(s.U, s.fl.kappa_max)
+    active = kappas >= 1                    # kappa = 0 => straggler
+    slots = s.sbuf.sample_slots(s.rng, (s.fl.kappa_max, xc.batch))
+    return req_s, kappas, active, slots
+
+
+def _server_round(s: SimpleNamespace, alg: str, upd, active, kappas) -> None:
+    if alg == "fednova":
+        # round_stacked merges sizes/kappas for active clients only, so
+        # stragglers keep their last-seen kappa (loop meta semantics)
+        s.server.round_stacked(upd, active, sizes=s.sbuf.sizes,
+                               kappas=kappas)
+    elif alg == "feddisco":
+        s.server.round_stacked(upd, active, sizes=s.sbuf.sizes,
+                               hists=s.sbuf.label_histograms())
+    else:
+        s.server.round_stacked(upd, active)
+
+
+def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
+                              eval_samples: int = 400,
+                              save_every_k: int = None, checkpoint_dir=None,
+                              resume_from=None):
+    """Stacked-engine counterpart of ``run_experiment``: the whole cohort
+    trains under one ``jax.vmap``, the server round is one vectorized
+    (U, N)-buffer update, and the paper's full *online* setting runs in
+    stacked form too — per-client FIFO buffers with Binomial(E_u, p_ac)
+    arrivals (``StackedOnlineBuffer``, committed at round boundaries as one
+    jitted scatter) and the joint kappa/f/p resource optimizer
+    (``resource_stacked``, all clients in one jitted f64 solve). So
+    ``xc.num_clients`` can be hundreds to thousands with no loss of paper
+    fidelity; only the request streams themselves stay per-client Python.
+
+    ``save_every_k``/``checkpoint_dir``/``resume_from`` mirror
+    ``run_experiment``: full RunState snapshots every k rounds, bit-identical
+    mid-stream resume (``_stacked_setup`` re-derives everything
+    deterministic from ``xc.seed`` — population, capacities, test set,
+    system params — and the snapshot then overwrites all mutable state).
+
+    ``xc.request_backend`` picks the request model: ``"python"`` draws from
+    the per-user oracle streams (the last O(U) Python loop per round);
+    ``"stacked"`` advances all U users at once with the jitted Gumbel-trick
+    sampler (``data/video_caching_stacked.py``, distribution-equivalent —
+    see DESIGN.md "Request model"). Both backends share the same population
+    parameters, capacities, arrival process and system params per seed.
+    """
+    _validate_ckpt_args(save_every_k, checkpoint_dir)
+    s = _stacked_setup(alg, xc, eval_samples)
+    local_step = make_vmapped_local_train(
+        s.grad_fn, s.fl.local_lr, s.fl.kappa_max, prox_mu=s.prox_mu)
 
     history, start_round = [], 0
     if resume_from is not None:
         snap = checkpoint.load_run_state(resume_from)
         _check_snapshot(snap, "stacked", alg, xc, eval_samples)
-        checkpoint.set_generator_state(rng, snap["rng"])
-        server.load_state_dict(snap["server"])
-        sbuf.load_state_dict(snap["buffer"])
-        if stacked_req:
-            rstream.load_state_dict(snap["streams"])
-        else:
-            load_streams_state(streams, snap["streams"])
-        history = list(snap["history"])
-        start_round = int(snap["next_round"])
+        history, start_round = _resume_stacked(s, snap)
     for t in range(start_round, xc.rounds):
         t_start = time.perf_counter()
-        counts = binomial_arrivals_batched(rng, xc.arrivals, p_ac)
-        if stacked_req:
-            arrivals = rstream.draw(counts, xc.dataset, xc.arrivals)
-            jax.block_until_ready(arrivals[1])   # honest request_gen_s
-        else:
-            arrivals = draw_arrival_batch(streams, counts, xc.dataset,
-                                          width=xc.arrivals)
-        req_s = time.perf_counter() - t_start
-        sbuf.stage(*arrivals)
-        sbuf.commit()
-        if xc.use_resource_opt:
-            dec = optimize_round_batched(rng, net, sysb, n_params)
-            kappas = dec.kappa
-        else:
-            kappas = np.full(U, fl.kappa_max)
-        active = kappas >= 1                    # kappa = 0 => straggler
-        slots = sbuf.sample_slots(rng, (fl.kappa_max, xc.batch))
-        d, w = local_step(server.params, sbuf.gather(slots),
+        req_s, kappas, active, slots = _draw_round_inputs(s, xc)
+        d, w = local_step(s.server.params, s.sbuf.gather(slots),
                           jnp.asarray(kappas))
-        upd = codec.flatten_stacked(w if weights_alg else d)
-        if alg == "fednova":
-            # round_stacked merges sizes/kappas for active clients only, so
-            # stragglers keep their last-seen kappa (loop meta semantics)
-            server.round_stacked(upd, active, sizes=sbuf.sizes,
-                                 kappas=kappas)
-        elif alg == "feddisco":
-            server.round_stacked(upd, active, sizes=sbuf.sizes,
-                                 hists=sbuf.label_histograms())
-        else:
-            server.round_stacked(upd, active)
-        loss, m = small_loss(server.params, test_batch, model)
+        upd = s.codec.flatten_stacked(w if s.weights_alg else d)
+        _server_round(s, alg, upd, active, kappas)
+        loss, m = small_loss(s.server.params, s.test_batch, s.model)
         history.append({"round": t, "test_loss": float(loss),
                         "test_acc": float(m["accuracy"]),
                         "participants": int(active.sum()),
@@ -377,13 +425,121 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
                 checkpoint_path(checkpoint_dir, t + 1),
                 {"engine": "stacked", "alg": alg,
                  "config": _run_shape(xc, eval_samples), "next_round": t + 1,
-                 "rng": checkpoint.generator_state(rng),
-                 "server": server.state_dict(),
-                 "buffer": sbuf.state_dict(),
-                 "streams": (rstream.state_dict() if stacked_req
-                             else streams_state_dict(streams)),
+                 "rng": checkpoint.generator_state(s.rng),
+                 "server": s.server.state_dict(),
+                 "buffer": s.sbuf.state_dict(),
+                 "streams": (s.rstream.state_dict() if s.stacked_req
+                             else streams_state_dict(s.streams)),
                  "history": history},
                 metadata={"engine": "stacked", "alg": alg, "round": t + 1})
+    return history
+
+
+POD_ENGINES = ("exact_tp", "recompute", "stale", "fedavg")
+
+
+def _make_pod_step(pod_engine: str, s: SimpleNamespace, mesh):
+    """The online pod local-train step for one engine flavor (all four
+    sample their minibatches from the mesh-sharded buffer via
+    ``make_pod_batch_fn``; ``core/pod.py`` online mode)."""
+    batch_fn = make_pod_batch_fn()
+    kw = dict(batch_fn=batch_fn, grad_fn=s.grad_fn, prox_mu=s.prox_mu)
+    if pod_engine == "exact_tp":
+        step = make_tp_train_step(None, s.fl, mesh, **kw)
+    elif pod_engine == "recompute":
+        step = make_recompute_train_step(None, s.fl, mesh, s.U, **kw)
+    elif pod_engine == "stale":
+        step = make_stale_score_train_step(None, s.fl, mesh, s.U, **kw)
+    elif pod_engine == "fedavg":
+        step = make_fedavg_train_step(None, s.fl, mesh, **kw)
+    else:   # unreachable through the harness, which validates up front
+        raise ValueError(pod_engine)
+    return jax.jit(step)
+
+
+def run_pod_online_experiment(alg: str, xc: ExperimentConfig,
+                              eval_samples: int = 400, mesh=None,
+                              pod_engine: str = "exact_tp",
+                              save_every_k: int = None, checkpoint_dir=None,
+                              resume_from=None):
+    """The paper's online setting on the pod engines: the same round as
+    ``run_vectorized_experiment`` — FIFO arrivals, batched resource
+    optimizer, straggler masking, stacked server — but the cohort's FIFO
+    datasets live **sharded over a device mesh** (``StackedOnlineBuffer``
+    mesh mode: U split over the ``('pod','data')`` client axes) and each
+    mesh row samples its local-SGD minibatches from its own buffer shard
+    inside the train step (``core/pod.py`` online mode). The server's dense
+    ``(U, N)`` round ops consume the sharded update rows under auto-SPMD.
+
+    ``pod_engine`` picks the local-train flavor (``POD_ENGINES``):
+    ``exact_tp``/``fedavg`` run every shard's clients under one vmap inside
+    a shard_map body; ``recompute`` scans clients sequentially (the
+    FSDP-era memory-lean shape) under auto-SPMD; ``stale`` is ``exact_tp``
+    plus the §Perf A5 one-round score lag (``FLConfig.stale_scores``,
+    applied by the stacked OSAFL server). All four execute the identical
+    per-client masked local-SGD math, so on a 1-device mesh this harness
+    matches ``run_vectorized_experiment`` metric-for-metric (the parity
+    anchor — tests/test_pod_online.py).
+
+    ``mesh`` defaults to all local devices on one ``('data','model'=1)``
+    mesh; fake a multi-device CPU mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (EXPERIMENTS.md
+    "Pod online harness"). ``xc.num_clients`` must be a multiple of the
+    mesh's client rows. Checkpointing mirrors ``run_vectorized_experiment``
+    (engine tag ``"pod"``; the sharded buffer is host-gathered into the npz
+    and re-sharded on resume), and a snapshot additionally refuses to
+    resume into a different ``pod_engine`` or mesh layout.
+    """
+    _validate_ckpt_args(save_every_k, checkpoint_dir)
+    if pod_engine not in POD_ENGINES:
+        raise ValueError(f"unknown pod_engine {pod_engine!r} "
+                         f"(expected one of {POD_ENGINES})")
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+    rows = client_rows(mesh)
+    if xc.num_clients % rows:
+        raise ValueError(
+            f"num_clients {xc.num_clients} is not divisible by the mesh's "
+            f"{rows} client rows {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    s = _stacked_setup(alg, xc, eval_samples, mesh=mesh,
+                       stale_scores=pod_engine == "stale")
+    pod_step = _make_pod_step(pod_engine, s, mesh)
+    mesh_shape = {"pod_engine": pod_engine,
+                  "mesh_axes": list(mesh.axis_names),
+                  "mesh_shape": [int(n) for n in mesh.devices.shape]}
+
+    history, start_round = [], 0
+    if resume_from is not None:
+        snap = checkpoint.load_run_state(resume_from)
+        _check_snapshot(snap, "pod", alg, xc, eval_samples, extra=mesh_shape)
+        history, start_round = _resume_stacked(s, snap)
+    for t in range(start_round, xc.rounds):
+        t_start = time.perf_counter()
+        req_s, kappas, active, slots = _draw_round_inputs(s, xc)
+        d, w = pod_step(s.server.params, s.sbuf.state.x, s.sbuf.state.y,
+                        jnp.asarray(slots), jnp.asarray(kappas))
+        upd = s.codec.flatten_stacked(w if s.weights_alg else d)
+        _server_round(s, alg, upd, active, kappas)
+        loss, m = small_loss(s.server.params, s.test_batch, s.model)
+        history.append({"round": t, "test_loss": float(loss),
+                        "test_acc": float(m["accuracy"]),
+                        "participants": int(active.sum()),
+                        "request_gen_s": req_s,
+                        "round_s": time.perf_counter() - t_start})
+        if save_every_k and (t + 1) % save_every_k == 0:
+            checkpoint.save_run_state(
+                checkpoint_path(checkpoint_dir, t + 1),
+                {"engine": "pod", "alg": alg,
+                 "config": dict(_run_shape(xc, eval_samples), **mesh_shape),
+                 "next_round": t + 1,
+                 "rng": checkpoint.generator_state(s.rng),
+                 "server": s.server.state_dict(),
+                 "buffer": s.sbuf.state_dict(),
+                 "streams": (s.rstream.state_dict() if s.stacked_req
+                             else streams_state_dict(s.streams)),
+                 "history": history},
+                metadata={"engine": "pod", "alg": alg, "round": t + 1,
+                          "pod_engine": pod_engine})
     return history
 
 

@@ -16,16 +16,30 @@ by one jitted scatter — the closed form of ``core/buffer.py``'s sequential
 ``core/buffer.py`` remains the semantic oracle: the stacked state (dataset
 contents in FIFO order, size, label histogram) must match it exactly over
 multi-round runs including wrap-around (tests/test_online_stacked.py).
+
+Mesh-sharded mode (DESIGN.md §3 "Online arrivals"): ``create(..., mesh=...)``
+(or ``shard(mesh)``) lays the whole state out over the mesh's
+``('pod','data')`` client axes — storage, staging and the cap/head/size
+pointer arrays are all ``(U, ...)``-leading, so every leaf gets
+``NamedSharding(mesh, P(client_axes, None, ...))`` and each shard owns
+U/rows whole clients. Staging and the FIFO commit are purely row-local, so
+the sharded ops are the *same* ``_stage``/``_commit`` bodies wrapped in
+``shard_map``: per-shard jitted scatters, no cross-shard communication and
+no host gather of storage. The pod train steps (``core/pod.py`` online mode)
+then sample minibatches from each row's own shard in place.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.shmap import client_axes, client_rows, shard_map
 
 
 class BufState(NamedTuple):
@@ -40,11 +54,10 @@ class BufState(NamedTuple):
     staged_n: jnp.ndarray   # (U,) int32
 
 
-@jax.jit
-def _stage(state: BufState, x_new, y_new, counts) -> BufState:
+def _stage_impl(state: BufState, x_new, y_new, counts) -> BufState:
     """Append ``counts[u]`` of client u's padded arrival rows to its staged
     buffer. Rows beyond counts[u] are padding and are dropped via an
-    out-of-range scatter index."""
+    out-of-range scatter index. Row-local: safe to run per shard."""
     U, S = state.staged_y.shape
     j = jnp.arange(x_new.shape[1], dtype=jnp.int32)
     pos = state.staged_n[:, None] + j[None, :]
@@ -56,9 +69,12 @@ def _stage(state: BufState, x_new, y_new, counts) -> BufState:
         staged_n=state.staged_n + counts.astype(state.staged_n.dtype))
 
 
-@jax.jit
-def _commit(state: BufState) -> BufState:
-    """Apply all staged arrivals FIFO at the round boundary (one scatter)."""
+_stage = jax.jit(_stage_impl)
+
+
+def _commit_impl(state: BufState) -> BufState:
+    """Apply all staged arrivals FIFO at the round boundary (one scatter).
+    Row-local: safe to run per shard."""
     U, S = state.staged_y.shape
     D = state.y.shape[1]
     n, c, h, s = state.staged_n, state.cap, state.head, state.size
@@ -74,6 +90,9 @@ def _commit(state: BufState) -> BufState:
         size=jnp.minimum(s + n, c),
         head=(h + jnp.maximum(s + n - c, 0)) % c,
         staged_n=jnp.zeros_like(n))
+
+
+_commit = jax.jit(_commit_impl)
 
 
 @partial(jax.jit, static_argnums=1)
@@ -94,11 +113,15 @@ class StackedOnlineBuffer:
     state: BufState
     num_classes: int
     last_hist: Optional[np.ndarray] = None
+    mesh: Optional[object] = None             # set by shard(); None = 1 host
+    _stage_fn: Optional[object] = field(default=None, repr=False)
+    _commit_fn: Optional[object] = field(default=None, repr=False)
+    _shardings: Optional[BufState] = field(default=None, repr=False)
 
     @classmethod
     def create(cls, capacities, feature_shape: tuple, num_classes: int,
                stage_capacity: Optional[int] = None, dtype=np.float32,
-               label_dtype=np.int64) -> "StackedOnlineBuffer":
+               label_dtype=np.int64, mesh=None) -> "StackedOnlineBuffer":
         caps = np.asarray(capacities, np.int32)
         U, D = caps.shape[0], int(caps.max())
         S = int(stage_capacity) if stage_capacity else D
@@ -114,7 +137,47 @@ class StackedOnlineBuffer:
             staged_x=jnp.zeros((U, S) + feat, dtype),
             staged_y=jnp.zeros((U, S), label_dtype),
             staged_n=jnp.zeros(U, jnp.int32))
-        return cls(state=state, num_classes=num_classes)
+        buf = cls(state=state, num_classes=num_classes)
+        return buf.shard(mesh) if mesh is not None else buf
+
+    # -- mesh-sharded mode ---------------------------------------------------
+    def shard(self, mesh) -> "StackedOnlineBuffer":
+        """Lay the whole cohort state out over ``mesh``'s client axes: every
+        ``(U, ...)``-leading leaf is split over ``('pod','data')`` so each
+        shard owns U/rows whole clients, and stage/commit become per-shard
+        jitted scatters (the unchanged row-local ``_stage``/``_commit``
+        bodies under ``shard_map`` — no cross-shard communication, no host
+        gather of storage). Returns ``self`` for chaining."""
+        axes = client_axes(mesh)
+        if not axes:
+            raise ValueError(
+                f"mesh {mesh} has no client axis (expected 'pod' or 'data' "
+                f"in {mesh.axis_names})")
+        rows = client_rows(mesh)
+        U = int(self.state.y.shape[0])
+        if U % rows:
+            raise ValueError(
+                f"cohort size {U} is not divisible by the mesh's {rows} "
+                "client rows; each shard must own whole clients")
+
+        def spec(leaf):
+            return P(axes, *([None] * (leaf.ndim - 1)))
+
+        shardings = jax.tree.map(
+            lambda leaf: NamedSharding(mesh, spec(leaf)), self.state)
+        state_specs = jax.tree.map(spec, self.state)
+        self.state = jax.device_put(self.state, shardings)
+        self.mesh = mesh
+        self._shardings = shardings
+        self._stage_fn = jax.jit(shard_map(
+            _stage_impl, mesh=mesh,
+            in_specs=(state_specs, spec(self.state.staged_x),
+                      spec(self.state.staged_y), P(axes)),
+            out_specs=state_specs, axis_names=set(axes)))
+        self._commit_fn = jax.jit(shard_map(
+            _commit_impl, mesh=mesh, in_specs=(state_specs,),
+            out_specs=state_specs, axis_names=set(axes)))
+        return self
 
     # -- staging (within-round arrivals go to the temp buffer) ---------------
     def stage(self, x_new, y_new, counts) -> None:
@@ -126,14 +189,15 @@ class StackedOnlineBuffer:
         if staged.max(initial=0) > S:
             raise ValueError(f"staged {int(staged.max())} > stage_capacity "
                              f"{S}; raise stage_capacity at create()")
-        self.state = _stage(self.state, jnp.asarray(x_new),
-                            jnp.asarray(y_new),
-                            jnp.asarray(counts, jnp.int32))
+        fn = self._stage_fn if self._stage_fn is not None else _stage
+        self.state = fn(self.state, jnp.asarray(x_new), jnp.asarray(y_new),
+                        jnp.asarray(counts, jnp.int32))
 
     def commit(self) -> int:
         """Apply staged arrivals FIFO. Returns total #ingested (cohort)."""
         n = int(np.asarray(self.state.staged_n).sum())
-        self.state = _commit(self.state)
+        fn = self._commit_fn if self._commit_fn is not None else _commit
+        self.state = fn(self.state)
         return n
 
     # -- views ----------------------------------------------------------------
@@ -193,26 +257,46 @@ class StackedOnlineBuffer:
         """Full snapshot of the cohort state: storage tensors, per-client
         capacity/head/size pointers, staged-but-uncommitted arrivals and the
         shift-proxy memory. Everything needed for a mid-stream resume to be
-        bit-identical, including wrap-around and over-capacity staging."""
+        bit-identical, including wrap-around and over-capacity staging.
+        Mesh-sharded buffers are host-gathered into plain numpy arrays (the
+        RunState npz format is host-gathered for now — ROADMAP: per-shard
+        async checkpointing); ``load_state_dict`` re-shards on restore."""
         s = self.state
         return {
-            "x": s.x, "y": s.y, "cap": s.cap, "size": s.size, "head": s.head,
-            "staged_x": s.staged_x, "staged_y": s.staged_y,
-            "staged_n": s.staged_n,
+            **{k: np.asarray(v) for k, v in s._asdict().items()},
             "num_classes": int(self.num_classes),
             "last_hist": self.last_hist,
         }
 
     def load_state_dict(self, sd: dict) -> None:
         """Restore a ``state_dict`` snapshot (full overwrite; the staged
-        arrivals resume exactly where they were, committed or not)."""
-        self.state = BufState(
-            x=jnp.asarray(sd["x"]), y=jnp.asarray(sd["y"]),
-            cap=jnp.asarray(sd["cap"]), size=jnp.asarray(sd["size"]),
-            head=jnp.asarray(sd["head"]),
-            staged_x=jnp.asarray(sd["staged_x"]),
-            staged_y=jnp.asarray(sd["staged_y"]),
-            staged_n=jnp.asarray(sd["staged_n"]))
+        arrivals resume exactly where they were, committed or not). The
+        snapshot's storage/pointer arrays are shape- and dtype-checked
+        against the live buffer's layout (a snapshot only fits the cohort
+        shape it came from), then re-laid out over the mesh when the live
+        buffer is sharded."""
+        from repro.checkpoint.run_state import CheckpointError
+        cur = self.state._asdict()
+        missing = sorted(set(cur) - set(sd))
+        if missing:
+            raise CheckpointError(
+                "buffer snapshot is missing keys: " + ", ".join(missing))
+        loaded = {}
+        for k, want in cur.items():
+            got = np.asarray(sd[k])
+            if tuple(got.shape) != tuple(want.shape):
+                raise CheckpointError(
+                    f"buffer snapshot {k!r} has shape {tuple(got.shape)}; "
+                    f"the live buffer expects {tuple(want.shape)}")
+            if got.dtype != np.dtype(want.dtype):
+                raise CheckpointError(
+                    f"buffer snapshot {k!r} has dtype {got.dtype}; the live "
+                    f"buffer expects {np.dtype(want.dtype)}")
+            loaded[k] = jnp.asarray(got)
+        state = BufState(**loaded)
+        if self.mesh is not None:
+            state = jax.device_put(state, self._shardings)
+        self.state = state
         self.num_classes = int(sd["num_classes"])
         lh = sd["last_hist"]
         self.last_hist = None if lh is None else np.asarray(lh)

@@ -43,18 +43,17 @@ def local_train(global_params, grad_fn: Callable, buffer: OnlineBuffer,
     return d, params
 
 
-def make_vmapped_local_train(grad_fn: Callable, lr: float, kappa_max: int,
-                             prox_mu: float = 0.0) -> Callable:
-    """Vectorized local training for the stacked engine: every client runs its
-    kappa_u local SGD steps in lockstep under one ``jax.vmap``, so a whole
-    cohort trains in a single XLA computation instead of U Python loops.
-
-    Returns a jitted ``fn(global_params, batches, kappas) -> (d, w)`` where
-    ``batches`` is a pytree with leaves of shape (U, kappa_max, B, ...),
-    ``kappas`` is (U,) int with values in [0, kappa_max] (steps past kappa_u
-    are masked no-ops; kappa_u == 0 — a straggler — yields d_u = 0), and the
-    outputs are stacked pytrees with a leading client axis. Semantics match
-    ``local_train`` step-for-step on the same batch sequence.
+def make_local_train_body(grad_fn: Callable, lr: float, kappa_max: int,
+                          prox_mu: float = 0.0) -> Callable:
+    """One client's masked local-SGD body,
+    ``one_client(global_params, batch_u, kappa_u) -> (d_u, w_u)`` with
+    ``batch_u`` leaves of shape (kappa_max, B, ...): kappa_u real SGD steps
+    (steps past kappa_u are masked no-ops; kappa_u == 0 — a straggler —
+    yields d_u = 0) and the normalized accumulated gradient. This is the
+    single per-client unit of work; ``make_vmapped_local_train`` vmaps it
+    for the stacked engine and the pod online steps (``core/pod.py``) run it
+    per mesh row inside shard_map / a client scan, so all engines share the
+    exact same local-training math.
     """
 
     def one_client(global_params, batch_u, kappa_u):
@@ -74,4 +73,22 @@ def make_vmapped_local_train(grad_fn: Callable, lr: float, kappa_max: int,
                          global_params, params)
         return d, params
 
+    return one_client
+
+
+def make_vmapped_local_train(grad_fn: Callable, lr: float, kappa_max: int,
+                             prox_mu: float = 0.0) -> Callable:
+    """Vectorized local training for the stacked engine: every client runs its
+    kappa_u local SGD steps in lockstep under one ``jax.vmap``, so a whole
+    cohort trains in a single XLA computation instead of U Python loops.
+
+    Returns a jitted ``fn(global_params, batches, kappas) -> (d, w)`` where
+    ``batches`` is a pytree with leaves of shape (U, kappa_max, B, ...),
+    ``kappas`` is (U,) int with values in [0, kappa_max], and the outputs are
+    stacked pytrees with a leading client axis. Semantics match
+    ``local_train`` step-for-step on the same batch sequence (the per-client
+    body is ``make_local_train_body``).
+    """
+    one_client = make_local_train_body(grad_fn, lr, kappa_max,
+                                       prox_mu=prox_mu)
     return jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0)))

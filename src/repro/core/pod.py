@@ -21,6 +21,17 @@ sketch          beyond-paper §Perf variant of exact_tp: replace the mean-
                 update psum with a k-dim count-sketch psum; lambda_u is
                 estimated from sketches (unbiased JL inner products). One
                 grad-sized all-reduce instead of two.
+
+Online mode (DESIGN.md §3 "Online arrivals"): every factory also accepts
+``batch_fn``/``grad_fn``. With ``batch_fn`` set, the returned step no longer
+takes a stationary batch — it takes the client-sharded storage of a
+``StackedOnlineBuffer`` plus sampled slots, gathers each mesh row's local-SGD
+minibatches from its own buffer shard *inside* the shard_map body
+(``make_pod_batch_fn``), and runs the paper's masked kappa_u-step local SGD
+(``client.make_local_train_body``) per client. The step returns the stacked
+``(d, w)`` client contributions; aggregation stays with the stacked servers
+(``benchmarks/common.py::run_pod_online_experiment``), whose dense
+``(U, N)`` round ops shard over the same client axes under auto-SPMD.
 """
 from __future__ import annotations
 
@@ -28,48 +39,19 @@ import math
 from functools import partial
 from typing import Callable, Optional
 
-import inspect
-
 import jax
 import jax.numpy as jnp
 
-try:                                    # jax >= 0.6: top-level export
-    from jax import shard_map as _shard_map
-except ImportError:                     # jax 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-_SM_KWARGS = set(inspect.signature(_shard_map).parameters)
-
-
-def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
-    """Version-compatible shard_map: new API takes axis_names/check_vma, the
-    0.4.x experimental API takes check_rep (replication checks off in both —
-    the scored all-reduce emits unreplicated per-client scalars)."""
-    if "check_vma" in _SM_KWARGS:
-        kw = dict(check_vma=False)
-        if axis_names is not None:
-            kw["axis_names"] = axis_names
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, **kw)
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      check_rep=False)
-
 from repro.configs.base import FLConfig, ModelConfig
+from repro.core.shmap import client_axes, client_rows, shard_map
 from repro.core.scores import (sketch_tree, tree_add, tree_dot, tree_norm,
                                tree_scale, tree_sub, tree_zeros_like)
 from repro.models.transformer import decode_step, forward, loss_fn
 
-
-def client_axes(mesh) -> tuple:
-    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
-
-
-def num_pod_clients(mesh) -> int:
-    n = 1
-    for a in client_axes(mesh):
-        n *= mesh.shape[a]
-    return n
+# clients ⇄ mesh rows: one client per device along the client axes
+num_pod_clients = client_rows
 
 
 def _lambda(chi, cos):
@@ -86,11 +68,99 @@ def _scored_metrics(lam, loss, axes, U):
 
 
 # ---------------------------------------------------------------------------
+# online mode: mesh rows sample their minibatches from their own shard of a
+# StackedOnlineBuffer (the paper's FIFO arrivals at pod scale)
+# ---------------------------------------------------------------------------
+
+def make_pod_batch_fn() -> Callable:
+    """The sampling layer between a mesh-sharded ``StackedOnlineBuffer`` and
+    the pod train steps: ``batch_fn(bx, by, slots)`` gathers each client
+    row's local-SGD minibatches from that client's own storage rows.
+
+    ``bx``/``by`` are buffer storage ``(U_loc, D, *feat)`` / ``(U_loc, D)``
+    (one whole shard inside a shard_map body; the full arrays under
+    auto-SPMD or on a 1-row mesh) and ``slots`` is ``(U_loc, kappa_max, B)``
+    live-window storage slots from ``StackedOnlineBuffer.sample_slots``.
+    Returns the ``{"x", "y"}`` batch pytree with leaves
+    ``(U_loc, kappa_max, B, ...)`` that ``client.make_local_train_body``
+    consumes. Row-local by construction — client u's minibatches only ever
+    read storage row u — so under shard_map there is no cross-shard (and no
+    host) gather.
+    """
+    def batch_fn(bx, by, slots):
+        uu = jnp.arange(bx.shape[0], dtype=jnp.int32)[:, None, None]
+        return {"x": bx[uu, slots], "y": by[uu, slots]}
+    return batch_fn
+
+
+def _online_grad_fn(grad_fn, cfg):
+    if grad_fn is not None:
+        return grad_fn
+    return jax.grad(lambda p, b: loss_fn(p, b, cfg)[0])
+
+
+def _make_online_step(fl: FLConfig, mesh, batch_fn: Callable,
+                      grad_fn: Callable, *, scan: bool = False,
+                      prox_mu: float = 0.0) -> Callable:
+    """Online train step shared by the four engine factories:
+    ``step(params, bx, by, slots, kappas) -> (d, w)`` with ``d``/``w``
+    stacked over the client axes. ``scan=False`` (exact_tp / stale / fedavg
+    flavors) runs every shard's clients under one vmap inside a shard_map
+    body; ``scan=True`` (the recompute flavor) scans clients sequentially
+    under auto-SPMD, trading wall-clock for the recompute engine's O(1)
+    per-client activation memory. Both execute the identical per-client
+    masked local-SGD math (``client.make_local_train_body``), so the engines
+    agree to float tolerance and kappa_u = 0 stragglers yield d_u = 0.
+    """
+    from repro.core.client import make_local_train_body
+    one_client = make_local_train_body(grad_fn, fl.local_lr, fl.kappa_max,
+                                       prox_mu=prox_mu)
+
+    if scan:
+        def step(params, bx, by, slots, kappas):
+            batch = batch_fn(bx, by, slots)
+
+            def body(_, inp):
+                batch_u, kappa_u = inp
+                return None, one_client(params, batch_u, kappa_u)
+
+            _, (d, w) = jax.lax.scan(body, None, (batch, kappas))
+            return d, w
+        return step
+
+    axes = client_axes(mesh)
+
+    def body(params, bx, by, slots, kappas):
+        batch = batch_fn(bx, by, slots)
+        return jax.vmap(one_client, in_axes=(None, 0, 0))(params, batch,
+                                                          kappas)
+
+    def step(params, bx, by, slots, kappas):
+        def row(x):
+            return P(axes, *([None] * (x.ndim - 1)))
+        in_specs = (jax.tree.map(lambda _: P(), params),
+                    row(bx), row(by), row(slots), P(axes))
+        out_shape = jax.eval_shape(body, params, bx, by, slots, kappas)
+        out_specs = jax.tree.map(row, out_shape)
+        return shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs,
+                         axis_names=set(axes))(params, bx, by, slots, kappas)
+    return step
+
+
+# ---------------------------------------------------------------------------
 # exact_tp / sketch engines (shard_map manual over clients, auto over model)
 # ---------------------------------------------------------------------------
 
 def make_tp_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
-                       *, sketch_dim: int = 0) -> Callable:
+                       *, sketch_dim: int = 0, batch_fn: Callable = None,
+                       grad_fn: Callable = None,
+                       prox_mu: float = 0.0) -> Callable:
+    if batch_fn is not None:
+        # online mode: rows sample from their own buffer shard (module doc)
+        return _make_online_step(fl, mesh, batch_fn,
+                                 _online_grad_fn(grad_fn, cfg),
+                                 prox_mu=prox_mu)
     axes = client_axes(mesh)
     U = num_pod_clients(mesh)
     lr_eff = fl.global_lr * fl.local_lr
@@ -153,7 +223,17 @@ def make_tp_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
 # ---------------------------------------------------------------------------
 
 def make_recompute_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
-                              num_clients: int, grad_specs=None) -> Callable:
+                              num_clients: int, grad_specs=None,
+                              *, batch_fn: Callable = None,
+                              grad_fn: Callable = None,
+                              prox_mu: float = 0.0) -> Callable:
+    if batch_fn is not None:
+        # online mode: sequential client scan under auto-SPMD (grad_specs
+        # pinning is a stationary-batch concern; the online scan carries no
+        # grad-sized accumulator — aggregation lives in the stacked server)
+        return _make_online_step(fl, mesh, batch_fn,
+                                 _online_grad_fn(grad_fn, cfg),
+                                 scan=True, prox_mu=prox_mu)
     lr_eff = fl.global_lr * fl.local_lr
     chi = fl.chi
     U = num_clients
@@ -221,7 +301,17 @@ def make_recompute_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
 
 def make_stale_score_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
                                 num_clients: int, grad_specs=None,
-                                sketch_dim: int = 1024) -> Callable:
+                                sketch_dim: int = 1024,
+                                *, batch_fn: Callable = None,
+                                grad_fn: Callable = None,
+                                prox_mu: float = 0.0) -> Callable:
+    if batch_fn is not None:
+        # online mode: local SGD is identical to exact_tp's; the one-round
+        # score lag lives server-side (FLConfig.stale_scores — the stacked
+        # servers weight this round's buffer with round t-1's lambdas)
+        return _make_online_step(fl, mesh, batch_fn,
+                                 _online_grad_fn(grad_fn, cfg),
+                                 prox_mu=prox_mu)
     lr_eff = fl.global_lr * fl.local_lr
     chi = fl.chi
     U = num_clients
@@ -270,8 +360,17 @@ def make_stale_score_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
 # plain data-parallel train step (the M-FedAvg pod baseline: 1 all-reduce)
 # ---------------------------------------------------------------------------
 
-def make_fedavg_train_step(cfg: ModelConfig, fl: FLConfig, mesh) -> Callable:
+def make_fedavg_train_step(cfg: ModelConfig, fl: FLConfig, mesh,
+                           *, batch_fn: Callable = None,
+                           grad_fn: Callable = None,
+                           prox_mu: float = 0.0) -> Callable:
     """Ordinary DP+TP step — the unscored baseline the roofline compares to."""
+    if batch_fn is not None:
+        # online mode: same sharded local SGD; unscored averaging lives in
+        # the stacked FedAvg server
+        return _make_online_step(fl, mesh, batch_fn,
+                                 _online_grad_fn(grad_fn, cfg),
+                                 prox_mu=prox_mu)
     lr_eff = fl.global_lr * fl.local_lr
 
     def step(params, batch):

@@ -1,0 +1,61 @@
+"""Shared mesh/shard_map plumbing for the client-sharded code paths.
+
+Everything that maps cohort rows onto the ``('pod','data')`` client axes of a
+mesh lives behind these three helpers so `core/pod.py` (train steps) and
+`core/buffer_stacked.py` (sharded FIFO storage) agree on one convention:
+
+  * ``client_axes(mesh)`` — the subset of ('pod','data') present on a mesh;
+    every ``(U, ...)`` cohort array is split over exactly these axes.
+  * ``client_rows(mesh)`` — the number of shards the client dimension is cut
+    into (U must be a multiple; each shard holds U/rows whole clients).
+  * ``shard_map(...)`` — version-compatible wrapper: jax >= 0.6 exports
+    ``jax.shard_map`` taking ``axis_names``/``check_vma``; 0.4.x has the
+    experimental API taking ``check_rep``. Replication checks are off in both
+    — the pod engines emit unreplicated per-client scalars, and the buffer
+    ops are purely row-local.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                    # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_KWARGS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """Version-compatible shard_map (see module docstring)."""
+    if "check_vma" in _SM_KWARGS:
+        kw = dict(check_vma=False)
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def use_mesh(mesh):
+    """Version-compatible ambient-mesh context: jax >= 0.5 wants
+    ``jax.sharding.set_mesh`` (the ``Mesh`` context manager is being phased
+    out); 0.4.x has no ``set_mesh``, where ``Mesh`` itself is the context
+    manager. Usage: ``with use_mesh(mesh): ...``."""
+    import jax
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
+def client_axes(mesh) -> tuple:
+    """The mesh axes the client (cohort) dimension is split over."""
+    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+
+
+def client_rows(mesh) -> int:
+    """Number of client-axis shards (devices along the client axes)."""
+    n = 1
+    for a in client_axes(mesh):
+        n *= mesh.shape[a]
+    return n

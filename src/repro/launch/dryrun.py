@@ -1,5 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Respect a caller-provided device count (the CI pod-smoke lane fakes an
+# 8-device mesh); otherwise force the 512-chip production dry-run topology,
+# preserving any unrelated XLA_FLAGS the caller set (e.g. --xla_dump_to).
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512"
+                               ).strip()
 
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on the
 production meshes, record memory/cost/collective analysis for the roofline.
@@ -11,6 +18,16 @@ Usage:
 
 No real arrays are allocated: parameters/batches/caches enter as
 ShapeDtypeStructs via jax.eval_shape.
+
+Online pod mode (EXPERIMENTS.md "Pod online harness"): ``--online`` instead
+*executes* ``benchmarks/common.py::run_pod_online_experiment`` — the paper's
+FIFO-arrival setting on a mesh-sharded buffer — for every pod engine on a
+small ('pod','data') CPU mesh, asserting finite losses and that the per-round
+history schema matches ``run_vectorized_experiment``'s. This is the CI
+``pod-smoke`` entrypoint:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.dryrun --online --pod 2 --data 4 --rounds 3
 """
 import argparse
 import dataclasses
@@ -28,6 +45,7 @@ from repro.configs.base import FLConfig, InputShape, ModelConfig
 from repro.core.pod import (make_fedavg_train_step, make_prefill_step,
                             make_recompute_train_step, make_serve_step,
                             make_stale_score_train_step, make_tp_train_step)
+from repro.core.shmap import use_mesh
 from repro.data.synthetic import train_batch_shapes
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
@@ -46,6 +64,15 @@ FSDP_ARCHS = {"deepseek-v3-671b", "arctic-480b"}
 
 def default_engine(arch: str) -> str:
     return "recompute" if arch in FSDP_ARCHS else "exact_tp"
+
+
+def cost_analysis(compiled) -> dict:
+    """Version-compatible ``compiled.cost_analysis()``: jax 0.4.x returns a
+    one-element list of per-partition dicts, newer jax the dict itself."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
 
 
 def abstract_params(cfg: ModelConfig):
@@ -118,7 +145,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
     pshard = param_shardings(params, mesh, fsdp=fsdp)
     axes = batch_axes(mesh)
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         if shp.kind == "train":
             if engine == "exact_tp":
                 step = make_tp_train_step(cfg, fl, mesh, sketch_dim=sketch)
@@ -239,7 +266,7 @@ def roofline(compiled, meta, cfg: ModelConfig, shp: InputShape) -> dict:
     seq = shp.seq_len if shp.kind in ("train", "prefill") else 0
     analysis = analyze_hlo(compiled.as_text(), seq_len=seq)
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     per_dev_flops = analysis.flops
     global_flops = per_dev_flops * n_chips
     per_dev_coll = analysis.total_collective_bytes
@@ -302,7 +329,7 @@ def run_one(arch, shape_name, *, multi_pod=False, engine=None, sketch=0,
         rec = roofline(compiled, meta, cfg, shp)
         if verbose:
             print(compiled.memory_analysis())
-            ca = compiled.cost_analysis()
+            ca = cost_analysis(compiled)
             if ca:
                 print({k: v for k, v in ca.items() if "flops" in k})
     out = Path(out_dir)
@@ -329,6 +356,62 @@ def run_one(arch, shape_name, *, multi_pod=False, engine=None, sketch=0,
     return rec
 
 
+def run_online(*, pod: int, data: int | None, rounds: int, clients: int,
+               model: str, out_dir: str, engines=None) -> list:
+    """Execute the online pod harness for every engine flavor on a small
+    client mesh (see module docstring). Raises SystemExit(1) on any
+    non-finite loss or history-schema mismatch; returns the per-engine
+    records and writes them as one JSON into ``out_dir``."""
+    import sys
+    root = Path(__file__).resolve().parents[3]
+    if str(root) not in sys.path:     # benchmarks/ lives at the repo root
+        sys.path.insert(0, str(root))
+    from benchmarks.common import (ExperimentConfig, POD_ENGINES,
+                                   run_pod_online_experiment,
+                                   run_vectorized_experiment)
+
+    data = data or max(jax.device_count() // pod, 1)
+    mesh = jax.make_mesh((pod, data), ("pod", "data"))
+    xc = ExperimentConfig(model=model, dataset=2, num_clients=clients,
+                          rounds=rounds, capacity=(12, 24), arrivals=4,
+                          batch=8, seed=5, request_backend="stacked")
+    schema = set(run_vectorized_experiment(
+        "osafl", dataclasses.replace(xc, rounds=1), eval_samples=64)[0])
+    records, failures = [], []
+    for engine in (engines or POD_ENGINES):
+        alg = "fedavg" if engine == "fedavg" else "osafl"
+        t0 = time.time()
+        hist = run_pod_online_experiment(alg, xc, eval_samples=64,
+                                         mesh=mesh, pod_engine=engine)
+        losses = [h["test_loss"] for h in hist]
+        if not all(np.isfinite(losses)):
+            failures.append(f"{engine}: non-finite losses {losses}")
+        bad = [i for i, h in enumerate(hist) if set(h) != schema]
+        if bad:
+            failures.append(f"{engine}: history schema mismatch at rounds "
+                            f"{bad} (want {sorted(schema)})")
+        records.append({"engine": engine, "alg": alg, "history": hist,
+                        "wall_s": time.time() - t0})
+        print(f"online {engine:10s} [{alg}] losses "
+              + " ".join(f"{l:.4f}" for l in losses)
+              + f" ({records[-1]['wall_s']:.1f}s)")
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    fn = out / (f"online__{model}__U{clients}__"
+                f"{pod}x{data}.json")
+    fn.write_text(json.dumps({
+        "mesh": {"pod": pod, "data": data}, "clients": clients,
+        "rounds": rounds, "model": model, "records": records}, indent=2,
+        default=float))
+    if failures:
+        for f in failures:
+            print("FAIL", f)
+        raise SystemExit(1)
+    print(f"online pod dryrun OK: {len(records)} engines x {rounds} rounds "
+          f"on a {pod}x{data} ('pod','data') mesh -> {fn}")
+    return records
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -339,7 +422,19 @@ def main():
     ap.add_argument("--remat", action="store_true")
     ap.add_argument("--kappa", type=int, default=1)
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--online", action="store_true",
+                    help="run the online pod harness (real arrays, small "
+                         "mesh) instead of the lower/compile sweep")
+    ap.add_argument("--pod", type=int, default=2)
+    ap.add_argument("--data", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--model", default="mlp")
     args = ap.parse_args()
+    if args.online:
+        run_online(pod=args.pod, data=args.data, rounds=args.rounds,
+                   clients=args.clients, model=args.model, out_dir=args.out)
+        return
     archs = TRANSFORMER_ARCHS if args.arch == "all" else [args.arch]
     shapes = list(INPUT_SHAPE_BY_NAME) if args.shape == "all" else [args.shape]
     for a in archs:

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.pod import make_serve_step
+from repro.core.shmap import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models.transformer import (decode_step, init_cache, init_model)
 from repro.models.transformer import whisper_encode
@@ -42,7 +43,7 @@ def run(arch: str, *, reduced=True, batch=4, prompt_len=32, decode_steps=16,
     prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
     serve = jax.jit(make_serve_step(cfg))
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         # prefill via sequential decode (cache-exact; a fused prefill kernel
         # is the production path, exercised by the prefill_32k dry-run)
         t0 = time.time()

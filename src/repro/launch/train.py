@@ -18,6 +18,7 @@ from repro.configs import get_config
 from repro.configs.base import FLConfig
 from repro.core.pod import (make_fedavg_train_step, make_recompute_train_step,
                             make_stale_score_train_step, make_tp_train_step)
+from repro.core.shmap import use_mesh
 from repro.data.synthetic import learnable_sequence_batch, make_train_batch
 from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import param_shardings
@@ -40,7 +41,7 @@ def run(arch: str, *, reduced=True, steps=20, engine="exact_tp", sketch=0,
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}, "
           f"engine={engine}")
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         if engine == "exact_tp":
             step = make_tp_train_step(cfg, fl, mesh, sketch_dim=sketch)
         elif engine == "recompute":

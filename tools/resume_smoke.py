@@ -32,8 +32,13 @@ _cfg = resume_smoke_config
 
 
 def main() -> int:
-    with tempfile.TemporaryDirectory() as da, \
-            tempfile.TemporaryDirectory() as db:
+    # TemporaryDirectory contexts guarantee the checkpoint trees are removed
+    # on every exit path — success, assertion failure, or an exception from
+    # the harness — so repeated CI retries on one runner always start clean;
+    # ignore_cleanup_errors keeps a half-written npz (e.g. the run dying
+    # inside np.savez) from turning teardown itself into the failure.
+    with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as da, \
+            tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as db:
         full = run_vectorized_experiment("osafl", _cfg(ROUNDS),
                                          eval_samples=64,
                                          save_every_k=ROUNDS,
