@@ -4,7 +4,15 @@ sketch scores, one-round-stale scores) do not degrade task accuracy."""
 from __future__ import annotations
 
 import dataclasses
+import sys
 import time
+from pathlib import Path
+
+if __package__ in (None, ""):    # executed as a script: python benchmarks/...
+    _ROOT = Path(__file__).resolve().parent.parent
+    for _p in (str(_ROOT / "src"), str(_ROOT)):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 import numpy as np
 
@@ -98,6 +106,8 @@ def _run_variant(xc, fl_overrides):
 
 
 if __name__ == "__main__":
+    import argparse
+    argparse.ArgumentParser(description=__doc__.splitlines()[0]).parse_args()
     rows, dt = run()
     for k, v in rows:
         print(f"{k},{dt * 1e6:.0f},{v:.4f}")

@@ -22,16 +22,37 @@ Three measurements:
     in-harness ``round_s`` history field with the first (compile-bearing)
     round dropped; the vectorized harness is run once per request backend
     and its per-round ``request_gen_s`` field is reported as a column.
+  * fused: the single-dispatch device-resident round
+    (``core/round_fused.FusedEngine``, ``rounds_per_dispatch`` rounds per
+    XLA executable, f32 resource solve) vs the multi-dispatch engine's
+    stacked-request round time, with the compiled segment's
+    ``hlo_analysis.dispatch_report`` (executable / entry / while-trip
+    counts) embedded in the measurement dict so the one-dispatch claim is
+    recorded in the CI artifact, not just asserted locally. Measured at
+    two operating points: U = 256, where the round is dominated by the
+    local-SGD compute both engines share (fusing can only remove the
+    per-round dispatch + host-draw overhead, measured ~1.1x; gated as a
+    >= 1x no-regression bar), and U = 16 with an 8-round baseline, where
+    that overhead IS the round (measured ~2.4-2.9x; gated >= 2x —
+    this is the term that stays constant while compute shrinks on
+    accelerators). ``single_dispatch`` must be true at both points.
 
-Usage: PYTHONPATH=src python benchmarks/bench_online.py [U] [rounds]
-           [--smoke] [--json PATH]
+Every timed region syncs ALL device outputs it produced
+(``block_until_ready`` on weights + buffer state, features + labels, or
+the whole per-round output pytree) — an unsynced output would let device
+work leak out of the perf_counter window and inflate the speedups.
+
+Usage: python benchmarks/bench_online.py [U] [rounds] [--smoke] [--json PATH]
+(runs from any CWD: the script shims repo root + ``src/`` onto sys.path)
 
 ``--smoke`` is the CI bench-gate mode: U = 256 with the minimum round
-counts, the 10x pipeline / 10x request-gen acceptance bars, plus a >= 4x
-end-to-end harness-round bar (the measured steady state is ~9x; the slack
-absorbs noisy shared runners). ``--json`` writes the three measurement
-dicts to a file — CI uploads it as a per-PR workflow artifact so the
-speedups are tracked, not just gated.
+counts, the 10x pipeline / 10x request-gen acceptance bars, a >= 4x
+end-to-end harness-round bar (the measured steady state is ~7-9x; the
+slack absorbs noisy shared runners), the >= 1x fused no-regression bar at
+U = 256 and the >= 2x fused overhead-elimination bar at U = 16 (all at
+k=8 rounds/dispatch). ``--json`` writes the measurement dicts to a file —
+CI uploads it as a per-PR workflow artifact so the speedups are tracked,
+not just gated.
 """
 from __future__ import annotations
 
@@ -42,16 +63,18 @@ import sys
 import time
 from pathlib import Path
 
+if __package__ in (None, ""):    # executed as a script: python benchmarks/...
+    _ROOT = Path(__file__).resolve().parent.parent
+    for _p in (str(_ROOT / "src"), str(_ROOT)):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-try:
-    from benchmarks.common import (ExperimentConfig, run_experiment,
-                                   run_vectorized_experiment)
-except ModuleNotFoundError:      # executed as a script from benchmarks/
-    from common import (ExperimentConfig, run_experiment,
-                        run_vectorized_experiment)
+from benchmarks.common import (ExperimentConfig, build_fused_engine,
+                               run_experiment, run_vectorized_experiment)
 
 from repro.configs.base import FLConfig
 from repro.core.buffer import OnlineBuffer, binomial_arrivals
@@ -62,6 +85,7 @@ from repro.core.resource_stacked import optimize_round_batched, stack_clients
 from repro.data.online import binomial_arrivals_batched, draw_arrival_batch
 from repro.data.video_caching import make_population
 from repro.data.video_caching_stacked import StackedRequestStream
+from repro.launch.hlo_analysis import dispatch_report
 from repro.models.small import init_small
 
 
@@ -116,7 +140,10 @@ def bench_pipeline(U: int = 256, rounds: int = 5, n_params: int = 18_000,
         sbuf.commit()
         optimize_round_batched(rng, net, sysb, n_params)
         st_srv.round_stacked(d_new, active)
-        jax.block_until_ready(st_srv.w)
+        # sync ALL async outputs of the timed round (weights AND the
+        # committed buffer state), not just the weights — an unsynced
+        # output would let device work leak out of the perf window
+        jax.block_until_ready((st_srv.w, sbuf.state))
 
     loop_round()
     vec_round()                                   # warm dispatch + compile
@@ -147,8 +174,8 @@ def bench_request_gen(U: int = 256, rounds: int = 5, e_u: int = 8,
     # are both compiled before timing
     warm = np.full(U, e_u)
     draw_arrival_batch(streams, warm, dataset, width=e_u)
-    jax.block_until_ready(rstream.draw(warm, dataset, e_u)[1])
-    jax.block_until_ready(rstream.draw(warm, dataset, e_u)[1])
+    jax.block_until_ready(rstream.draw(warm, dataset, e_u))
+    jax.block_until_ready(rstream.draw(warm, dataset, e_u))
 
     t0 = time.perf_counter()
     for _ in range(rounds):
@@ -158,7 +185,9 @@ def bench_request_gen(U: int = 256, rounds: int = 5, e_u: int = 8,
     t0 = time.perf_counter()
     for _ in range(rounds):
         counts = binomial_arrivals_batched(rng_st, e_u, p_ac)
-        jax.block_until_ready(rstream.draw(counts, dataset, e_u)[1])
+        # block on the full (features, labels) draw — timing only the label
+        # column would leave the feature scatter outside the perf window
+        jax.block_until_ready(rstream.draw(counts, dataset, e_u))
     t_st = (time.perf_counter() - t0) / rounds
     return {"U": U, "dataset": dataset, "python_s": t_py, "stacked_s": t_st,
             "speedup": t_py / t_st}
@@ -186,6 +215,49 @@ def bench_harness(U: int = 256, rounds: int = 3, model: str = "mlp",
                 "stacked": float(np.mean([h["request_gen_s"] for h in hs]))},
             "speedup": t_loop / t_vec,
             "speedup_stacked_req": t_loop / t_vec_st}
+
+
+def bench_fused(U: int = 256, rounds: int = 2, rounds_per_dispatch: int = 8,
+                model: str = "mlp", dataset: int = 2, seed: int = 0,
+                dispatch_s: float = None) -> dict:
+    """Fused single-dispatch rounds vs the multi-dispatch engine.
+
+    The fused side drives ``core/round_fused.FusedEngine`` directly (not the
+    harness) so the compiled segment's optimized HLO is in hand for
+    ``launch/hlo_analysis.dispatch_report`` — the artifact records the
+    executable/while-loop counts that substantiate the one-dispatch claim.
+    ``dispatch_s`` (mean steady-state round_s of the dispatch engine with
+    stacked requests) can be passed in from ``bench_harness`` to avoid
+    re-measuring; standalone runs measure it here. Timed fused segments are
+    fully synced (``block_until_ready`` on every per-round output column)."""
+    xc = ExperimentConfig(model=model, dataset=dataset, num_clients=U,
+                          rounds=1 + rounds, seed=seed,
+                          request_backend="stacked")
+    if dispatch_s is None:
+        hd = run_vectorized_experiment("osafl", xc)[1:]
+        dispatch_s = float(np.mean([h["round_s"] for h in hd]))
+    fxc = dataclasses.replace(xc, round_backend="fused",
+                              resource_backend="f32",
+                              rounds_per_dispatch=rounds_per_dispatch)
+    engine, s = build_fused_engine("osafl", fxc)
+    carry = engine.init_carry(s.server, s.sbuf, s.rstream, 0)
+    carry, outs = engine.run_segment(carry, rounds_per_dispatch)   # compile
+    jax.block_until_ready(outs)
+    segments = max(2, -(-rounds // rounds_per_dispatch))
+    t0 = time.perf_counter()
+    for _ in range(segments):
+        carry, outs = engine.run_segment(carry, rounds_per_dispatch)
+        jax.block_until_ready(outs)
+    t_fused = (time.perf_counter() - t0) / (segments * rounds_per_dispatch)
+    engine.check_outputs(jax.tree.map(np.asarray, outs))
+    rep = dispatch_report(engine.compiled_text(rounds_per_dispatch),
+                          rounds_per_dispatch=rounds_per_dispatch)
+    return {"U": U, "rounds_per_dispatch": rounds_per_dispatch,
+            "dispatch_s": dispatch_s, "fused_s": t_fused,
+            "dispatch_rounds_per_s": 1.0 / dispatch_s,
+            "fused_rounds_per_s": 1.0 / t_fused,
+            "speedup": dispatch_s / t_fused,
+            "dispatch_report": rep}
 
 
 def main() -> None:
@@ -216,10 +288,29 @@ def main() -> None:
     print(f"U={U} in-harness request_gen_s column: "
           f"python {rg['python']*1e3:.1f} ms, "
           f"stacked {rg['stacked']*1e3:.2f} ms per round")
+    f = bench_fused(U, rounds, dispatch_s=h["vec_stacked_req_s"])
+    rep = f["dispatch_report"]
+    print(f"U={U} fused single-dispatch round "
+          f"(k={f['rounds_per_dispatch']} rounds/dispatch): dispatch "
+          f"{f['dispatch_s']*1e3:.1f} ms vs fused {f['fused_s']*1e3:.1f} ms "
+          f"-> {f['speedup']:.1f}x ({f['fused_rounds_per_s']:.0f} rounds/s); "
+          f"HLO: {rep['hlo_modules']} module / {rep['entry_computations']} "
+          f"entry, single_dispatch={rep['single_dispatch']}")
+    # overhead-dominated operating point: at a small cohort the per-round
+    # dispatch + host-draw overhead (the thing fusing eliminates) IS the
+    # round; 8 baseline rounds because 2 steady-state samples are too noisy
+    # to gate on at ~30 ms/round
+    fs = bench_fused(16, 8)
+    reps = fs["dispatch_report"]
+    print(f"U=16 fused single-dispatch round (overhead-dominated point): "
+          f"dispatch {fs['dispatch_s']*1e3:.1f} ms vs fused "
+          f"{fs['fused_s']*1e3:.1f} ms -> {fs['speedup']:.1f}x; "
+          f"single_dispatch={reps['single_dispatch']}")
     if args.json:
         Path(args.json).write_text(json.dumps(
-            {"pipeline": p, "request_gen": g, "harness": h,
-             "smoke": args.smoke}, indent=2, default=float))
+            {"pipeline": p, "request_gen": g, "harness": h, "fused": f,
+             "fused_small": fs, "smoke": args.smoke},
+            indent=2, default=float))
         print(f"wrote measurements -> {args.json}")
     if U < 256:                  # the acceptance bars are defined at U=256
         print("done (speedup bars only gated at U >= 256)")
@@ -230,9 +321,24 @@ def main() -> None:
     elif args.smoke and h["speedup_stacked_req"] < 4:
         raise SystemExit("FAIL: end-to-end harness round speedup < 4x "
                          f"(got {h['speedup_stacked_req']:.1f}x)")
+    elif args.smoke and not (rep["single_dispatch"]
+                             and reps["single_dispatch"]):
+        raise SystemExit("FAIL: fused segment did not compile to one "
+                         f"executable (dispatch_report: U=256 {rep}, "
+                         f"U=16 {reps})")
+    elif args.smoke and f["speedup"] < 1:
+        raise SystemExit("FAIL: fused round slower than multi-dispatch at "
+                         f"U=256 (got {f['speedup']:.2f}x, need >= 1x; the "
+                         "compute-bound point is a no-regression bar)")
+    elif args.smoke and fs["speedup"] < 2:
+        raise SystemExit("FAIL: fused round speedup < 2x vs multi-dispatch "
+                         f"at the overhead-dominated U=16 point (got "
+                         f"{fs['speedup']:.1f}x)")
     else:
         print("PASS: pipeline >= 10x, request generation >= 10x"
-              + (", harness round >= 4x" if args.smoke else ""))
+              + (", harness round >= 4x, fused single-dispatch >= 1x "
+                 "at U=256 and >= 2x at U=16"
+                 if args.smoke else ""))
 
 
 if __name__ == "__main__":

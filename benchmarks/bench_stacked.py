@@ -6,12 +6,21 @@ the stacked path runs the identical math as one jitted update over a (U, N)
 buffer with fused-Pallas scoring. Acceptance target for the stacked engine is
 a >= 10x round-time speedup at U = 256.
 
-Usage: PYTHONPATH=src python benchmarks/bench_stacked.py [U] [rounds]
+Usage: python benchmarks/bench_stacked.py [U] [rounds]
+(runs from any CWD: the script shims repo root + ``src/`` onto sys.path)
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
+from pathlib import Path
+
+if __package__ in (None, ""):    # executed as a script: python benchmarks/...
+    _ROOT = Path(__file__).resolve().parent.parent
+    for _p in (str(_ROOT / "src"), str(_ROOT)):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +68,9 @@ def bench(U: int = 256, rounds: int = 3, seed: int = 0) -> dict:
     t0 = time.perf_counter()
     for _ in range(rounds):
         stacked.round_stacked(d_new, active)
-    jax.block_until_ready(stacked.w)
+    # sync every async output of the round (weights AND the contribution
+    # buffer) inside the perf window
+    jax.block_until_ready((stacked.w, stacked.d_buffer))
     t_stacked = (time.perf_counter() - t0) / rounds
 
     # the two engines must agree before a speedup means anything
@@ -71,9 +82,11 @@ def bench(U: int = 256, rounds: int = 3, seed: int = 0) -> dict:
 
 
 if __name__ == "__main__":
-    U = int(sys.argv[1]) if len(sys.argv) > 1 else 256
-    rounds = int(sys.argv[2]) if len(sys.argv) > 2 else 3
-    r = bench(U, rounds)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("U", nargs="?", type=int, default=256)
+    ap.add_argument("rounds", nargs="?", type=int, default=3)
+    args = ap.parse_args()
+    r = bench(args.U, args.rounds)
     print(f"U={r['U']} N={r['n_params']}: loop {r['loop_s']*1e3:.1f} ms/round"
           f" vs stacked {r['stacked_s']*1e3:.2f} ms/round"
           f" -> {r['speedup']:.1f}x (param drift {r['max_param_drift']:.2e})")

@@ -25,6 +25,7 @@ from repro.core.pod import (make_fedavg_train_step, make_pod_batch_fn,
                             make_stale_score_train_step, make_tp_train_step)
 from repro.core.resource import (NetworkConfig, make_clients, optimize_round)
 from repro.core.resource_stacked import optimize_round_batched, stack_clients
+from repro.core.round_fused import FusedEngine
 from repro.core.shmap import client_rows
 from repro.data.online import (binomial_arrivals_batched, dataset_layout,
                                draw_arrival_batch, load_streams_state,
@@ -128,6 +129,16 @@ class ExperimentConfig:
     request_backend: str = "python"   # python (per-user oracle streams) |
                                       # stacked (batched Gumbel-trick sampler,
                                       # vectorized harness only)
+    round_backend: str = "dispatch"   # dispatch (multi-program round) |
+                                      # fused (one-dispatch device-resident
+                                      # round, core/round_fused.py; requires
+                                      # alg=osafl + request_backend=stacked,
+                                      # run_vectorized_experiment only)
+    resource_backend: str = "x64"     # x64 (scoped-f64 parity oracle) |
+                                      # f32 (log-domain, accelerator-native)
+    rounds_per_dispatch: int = 1      # fused backend: rounds folded into one
+                                      # device dispatch between eval/
+                                      # checkpoint boundaries
     cell_radius_m: float = 600.0      # milder than Fig.3's 1 km so the
                                       # reduced-round runs see participants
 
@@ -153,6 +164,11 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400,
             "run_experiment is the per-client oracle harness and only "
             "supports request_backend='python'; the stacked Gumbel sampler "
             f"needs run_vectorized_experiment (got {xc.request_backend!r})")
+    if xc.round_backend != "dispatch":
+        raise ValueError(
+            "run_experiment only supports round_backend='dispatch'; the "
+            f"fused round needs run_vectorized_experiment "
+            f"(got {xc.round_backend!r})")
     model = xc.model
     cat, streams = make_population(xc.seed, xc.num_clients, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)
@@ -300,6 +316,8 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
     fl = FLConfig(num_clients=U, local_lr=xc.local_lr, global_lr=glr,
                   algorithm=alg, engine="stacked",
                   request_backend=xc.request_backend,
+                  round_backend=xc.round_backend,
+                  resource_backend=xc.resource_backend,
                   stale_scores=stale_scores)
     server = make_server(params, fl, U, seed=xc.seed)
 
@@ -348,8 +366,8 @@ def _draw_round_inputs(s: SimpleNamespace, xc: ExperimentConfig) -> tuple:
     s.sbuf.stage(*arrivals)
     s.sbuf.commit()
     if xc.use_resource_opt:
-        kappas = optimize_round_batched(s.rng, s.net, s.sysb,
-                                        s.n_params).kappa
+        kappas = optimize_round_batched(s.rng, s.net, s.sysb, s.n_params,
+                                        backend=xc.resource_backend).kappa
     else:
         kappas = np.full(s.U, s.fl.kappa_max)
     active = kappas >= 1                    # kappa = 0 => straggler
@@ -368,6 +386,94 @@ def _server_round(s: SimpleNamespace, alg: str, upd, active, kappas) -> None:
                                hists=s.sbuf.label_histograms())
     else:
         s.server.round_stacked(upd, active)
+
+
+def build_fused_engine(alg: str, xc: ExperimentConfig,
+                       eval_samples: int = 400) -> tuple:
+    """Deterministic setup + a ``core/round_fused.FusedEngine`` over it:
+    ``(engine, s)`` with ``s`` the ``_stacked_setup`` namespace the engine's
+    carries are initialized from / written back to. Shared by the fused
+    branch of ``run_vectorized_experiment`` and the bench/HLO tooling
+    (``bench_online.py`` compiles a segment and feeds its optimized HLO to
+    ``launch/hlo_analysis.dispatch_report``)."""
+    if xc.rounds_per_dispatch < 1:
+        raise ValueError(f"rounds_per_dispatch must be >= 1, got "
+                         f"{xc.rounds_per_dispatch}")
+    # surface the engine's restrictions before paying for setup (and before
+    # touching OSAFL-only server attributes / the stacked request stream)
+    if alg != "osafl":
+        raise ValueError(
+            "the fused round implements the OSAFL scored round only "
+            f"(got algorithm={alg!r}); run other algorithms with "
+            "round_backend='dispatch'")
+    if xc.request_backend != "stacked":
+        raise ValueError(
+            "the fused round draws requests with the stacked Gumbel "
+            f"sampler; set request_backend='stacked' "
+            f"(got {xc.request_backend!r})")
+    s = _stacked_setup(alg, xc, eval_samples)
+    engine = FusedEngine(
+        fl=s.fl, codec=s.codec, model=s.model, consts=s.rstream.consts,
+        topk=s.rstream.topk, dataset=xc.dataset, arrivals=xc.arrivals,
+        batch=xc.batch, p_ac=s.p_ac, sysb=s.sysb, net=s.net,
+        n_params=s.n_params, test_batch=s.test_batch, alphas=s.server.alphas,
+        sketch_key=s.server._sketch_key, seed=xc.seed,
+        use_resource_opt=xc.use_resource_opt,
+        resource_backend=xc.resource_backend)
+    return engine, s
+
+
+def _run_fused(alg: str, xc: ExperimentConfig, eval_samples: int,
+               save_every_k, checkpoint_dir, resume_from):
+    """The ``round_backend="fused"`` body of ``run_vectorized_experiment``:
+    the same trajectory state and RunState checkpoints, but rounds execute
+    in single-dispatch segments of up to ``xc.rounds_per_dispatch``
+    (truncated at checkpoint boundaries, which are segment boundaries by
+    construction — the per-round keying makes the truncation invisible to
+    the trajectory). History rows mirror the dispatch engine's; per-round
+    host draws don't exist, so ``request_gen_s`` is 0 and ``round_s`` is
+    the fully-synced segment wall clock divided by its length."""
+    engine, s = build_fused_engine(alg, xc, eval_samples)
+    history, start_round = [], 0
+    if resume_from is not None:
+        snap = checkpoint.load_run_state(resume_from)
+        _check_snapshot(snap, "stacked", alg, xc, eval_samples)
+        history, start_round = _resume_stacked(s, snap)
+    carry = engine.init_carry(s.server, s.sbuf, s.rstream, start_round)
+    t, outs = start_round, None
+    while t < xc.rounds:
+        seg = min(xc.rounds_per_dispatch, xc.rounds - t)
+        if save_every_k:
+            boundary = (t // save_every_k + 1) * save_every_k
+            seg = min(seg, boundary - t)
+        t_start = time.perf_counter()
+        carry, outs = engine.run_segment(carry, seg)
+        outs = jax.tree.map(np.asarray, outs)       # sync: honest round_s
+        seg_s = time.perf_counter() - t_start
+        engine.check_outputs(outs)
+        for i in range(seg):
+            history.append({"round": t + i,
+                            "test_loss": float(outs["test_loss"][i]),
+                            "test_acc": float(outs["test_acc"][i]),
+                            "participants": int(outs["participants"][i]),
+                            "request_gen_s": 0.0,
+                            "round_s": seg_s / seg})
+        t += seg
+        if save_every_k and t % save_every_k == 0:
+            engine.write_back(carry, outs, s.server, s.sbuf, s.rstream)
+            checkpoint.save_run_state(
+                checkpoint_path(checkpoint_dir, t),
+                {"engine": "stacked", "alg": alg,
+                 "config": _run_shape(xc, eval_samples), "next_round": t,
+                 "rng": checkpoint.generator_state(s.rng),
+                 "server": s.server.state_dict(),
+                 "buffer": s.sbuf.state_dict(),
+                 "streams": s.rstream.state_dict(),
+                 "history": history},
+                metadata={"engine": "stacked", "alg": alg, "round": t})
+    if outs is not None:
+        engine.write_back(carry, outs, s.server, s.sbuf, s.rstream)
+    return history
 
 
 def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
@@ -398,6 +504,12 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     parameters, capacities, arrival process and system params per seed.
     """
     _validate_ckpt_args(save_every_k, checkpoint_dir)
+    if xc.round_backend not in ("dispatch", "fused"):
+        raise ValueError(f"unknown round_backend {xc.round_backend!r} "
+                         "(expected 'dispatch' or 'fused')")
+    if xc.round_backend == "fused":
+        return _run_fused(alg, xc, eval_samples, save_every_k,
+                          checkpoint_dir, resume_from)
     s = _stacked_setup(alg, xc, eval_samples)
     local_step = make_vmapped_local_train(
         s.grad_fn, s.fl.local_lr, s.fl.kappa_max, prox_mu=s.prox_mu)
@@ -415,6 +527,10 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
         upd = s.codec.flatten_stacked(w if s.weights_alg else d)
         _server_round(s, alg, upd, active, kappas)
         loss, m = small_loss(s.server.params, s.test_batch, s.model)
+        # round_s feeds the bench gates: block on every async output of the
+        # round (the server round's weights + the committed buffer), not
+        # just the eval loss
+        jax.block_until_ready((loss, s.server.w, s.sbuf.state))
         history.append({"round": t, "test_loss": float(loss),
                         "test_acc": float(m["accuracy"]),
                         "participants": int(active.sum()),
@@ -491,6 +607,11 @@ def run_pod_online_experiment(alg: str, xc: ExperimentConfig,
     resume into a different ``pod_engine`` or mesh layout.
     """
     _validate_ckpt_args(save_every_k, checkpoint_dir)
+    if xc.round_backend != "dispatch":
+        raise ValueError(
+            "the pod harness only supports round_backend='dispatch' (the "
+            "fused single-device round is run_vectorized_experiment only; "
+            f"got {xc.round_backend!r})")
     if pod_engine not in POD_ENGINES:
         raise ValueError(f"unknown pod_engine {pod_engine!r} "
                          f"(expected one of {POD_ENGINES})")
@@ -521,6 +642,8 @@ def run_pod_online_experiment(alg: str, xc: ExperimentConfig,
         upd = s.codec.flatten_stacked(w if s.weights_alg else d)
         _server_round(s, alg, upd, active, kappas)
         loss, m = small_loss(s.server.params, s.test_batch, s.model)
+        # same fully-synced round_s convention as the vectorized harness
+        jax.block_until_ready((loss, s.server.w, s.sbuf.state))
         history.append({"round": t, "test_loss": float(loss),
                         "test_acc": float(m["accuracy"]),
                         "participants": int(active.sum()),

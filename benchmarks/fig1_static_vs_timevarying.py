@@ -3,7 +3,15 @@ time-varying (FIFO, online-arrival) dataset. Reduced scale: video-caching
 Dataset-1 stands in for CIFAR-10 (offline container; same mechanism)."""
 from __future__ import annotations
 
+import sys
 import time
+from pathlib import Path
+
+if __package__ in (None, ""):    # executed as a script: python benchmarks/...
+    _ROOT = Path(__file__).resolve().parent.parent
+    for _p in (str(_ROOT / "src"), str(_ROOT)):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +46,8 @@ def run(rounds=15, seed=0):
 
 
 if __name__ == "__main__":
+    import argparse
+    argparse.ArgumentParser(description=__doc__.splitlines()[0]).parse_args()
     rows, dt = run()
     for k, v in rows:
         print(f"{k},{dt * 1e6:.0f},{v:.4f}")

@@ -53,5 +53,7 @@ def run(dirpath=DEFAULT_DIR):
 
 
 if __name__ == "__main__":
+    import argparse
+    argparse.ArgumentParser(description=__doc__.splitlines()[0]).parse_args()
     recs = load_records()
     print(table(recs))

@@ -3,11 +3,23 @@
 Prints ``name,us_per_call,derived`` CSV rows. Reduced scales for CPU are
 documented in EXPERIMENTS.md (the mechanisms are the paper's, the scale is
 not). The roofline rows require dry-run artifacts in experiments/dryrun/.
+
+Usage: python benchmarks/run.py
+(runs from any CWD: the script shims repo root + ``src/`` onto sys.path,
+so ``from benchmarks import ...`` resolves without PYTHONPATH juggling)
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
+from pathlib import Path
+
+if __package__ in (None, ""):    # executed as a script: python benchmarks/run.py
+    _ROOT = Path(__file__).resolve().parent.parent
+    for _p in (str(_ROOT / "src"), str(_ROOT)):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 from benchmarks import (ablation_scores, fig1_static_vs_timevarying,
                         fig2_label_drift, fig3_stragglers, roofline,
@@ -15,6 +27,7 @@ from benchmarks import (ablation_scores, fig1_static_vs_timevarying,
 
 
 def main() -> None:
+    argparse.ArgumentParser(description=__doc__.splitlines()[0]).parse_args()
     suites = [
         ("fig2_label_drift", lambda: fig2_label_drift.run()),
         ("fig3_stragglers", lambda: fig3_stragglers.run()),

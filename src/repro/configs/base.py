@@ -216,6 +216,20 @@ class FLConfig:
                                       # data layer by the cohort harness
                                       # (benchmarks/common.py), recorded
                                       # here; servers never consult it.
+    round_backend: str = "dispatch"   # online round execution: dispatch
+                                      # (~7 device programs/round with host
+                                      # draws between them) | fused (the
+                                      # whole round — arrivals, FIFO commit,
+                                      # local SGD, scored aggregation,
+                                      # resource solve — as ONE jitted
+                                      # program, core/round_fused.py; osafl
+                                      # + stacked requests only). Applied by
+                                      # the cohort harness, recorded here.
+    resource_backend: str = "x64"     # SCA resource solve numerics: x64
+                                      # (scoped-f64 parity oracle) | f32
+                                      # (log-domain SNR reformulation,
+                                      # accelerator-native — see
+                                      # core/resource_stacked.py)
     literal_init_buffer: bool = False # Algorithm 2's literal d[u]=w^t/eta for
                                       # never-participated clients (equivalent
                                       # to treating their model as 0; unstable

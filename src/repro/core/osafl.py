@@ -23,6 +23,55 @@ from repro.core.scores import (lambda_scores, lambda_scores_sketched,
                                tree_scale, tree_sub, tree_zeros_like)
 
 
+def make_stacked_round_body(fl: FLConfig):
+    """The whole stacked OSAFL round — buffer write-back, never-participated
+    refresh, eq. 19-21 scores, scored SGD step — as one pure function
+
+        rnd(w, buf, part_prev, lam_prev, d_new, active, alphas, key)
+            -> (w, buf, part, lam_use, lam)
+
+    shared by ``StackedOSAFLServer`` (which jits it stand-alone) and the
+    one-dispatch engine (``core/round_fused.py``, which inlines it into the
+    fused per-round program). Scoring routes through the Pallas kernel or
+    the jnp reference per ``fl.score_backend``.
+    """
+    from repro.kernels.ops import _interpret
+    from repro.kernels.ref import scored_reduce_reference
+    from repro.kernels.scored_reduce import scored_reduce
+    interpret = _interpret()
+
+    def rnd(w, buf, part_prev, lam_prev, d_new, active, alphas, key):
+        part = part_prev | active
+        buf = jnp.where(active[:, None], d_new, buf)
+        # Algorithm 2 line 17: refresh never-participated slots
+        refresh = (w / fl.local_lr if fl.literal_init_buffer
+                   else jnp.zeros_like(w))
+        buf = jnp.where(part[:, None], buf, refresh[None, :])
+        if fl.score_sketch_dim:
+            sk = sketch_stacked(buf, key, fl.score_sketch_dim)
+            mean = jnp.mean(sk, axis=0)
+            dots = sk @ mean
+            norms = jnp.sum(sk * sk, axis=1)
+            msq = jnp.sum(mean * mean)
+        else:
+            mean = jnp.mean(buf, axis=0)
+            if fl.score_backend == "kernel":
+                dots, norms, msq = scored_reduce(buf, mean,
+                                                 interpret=interpret)
+            else:
+                dots, norms, msq = scored_reduce_reference(buf, mean)
+        cos = dots / jnp.maximum(jnp.sqrt(norms) * jnp.sqrt(msq), 1e-12)
+        lam = (fl.chi + cos) / (fl.chi + 1.0)
+        # stale_scores: weight THIS round's buffer with the PREVIOUS
+        # round's scores (single-pass pod engine semantics)
+        lam_use = lam_prev if fl.stale_scores else lam
+        step = (alphas * lam_use) @ buf
+        w = w - fl.global_lr * fl.local_lr * step
+        return w, buf, part, lam_use, lam
+
+    return rnd
+
+
 @dataclass
 class ClientUpdate:
     uid: int
@@ -147,49 +196,11 @@ class StackedOSAFLServer:
         self.last_scores = np.ones(num_clients)
         self._lam_prev = jnp.ones(num_clients, jnp.float32)
         self._sketch_key = jax.random.PRNGKey(seed)
-        self._round_fn = jax.jit(self._build_round())
+        self._round_fn = jax.jit(make_stacked_round_body(fl))
 
     @property
     def params(self):
         return self.codec.unflatten(self.w)
-
-    def _build_round(self):
-        fl = self.fl
-        from repro.kernels.ops import _interpret
-        from repro.kernels.ref import scored_reduce_reference
-        from repro.kernels.scored_reduce import scored_reduce
-        interpret = _interpret()
-
-        def rnd(w, buf, part_prev, lam_prev, d_new, active, alphas, key):
-            part = part_prev | active
-            buf = jnp.where(active[:, None], d_new, buf)
-            # Algorithm 2 line 17: refresh never-participated slots
-            refresh = (w / fl.local_lr if fl.literal_init_buffer
-                       else jnp.zeros_like(w))
-            buf = jnp.where(part[:, None], buf, refresh[None, :])
-            if fl.score_sketch_dim:
-                sk = sketch_stacked(buf, key, fl.score_sketch_dim)
-                mean = jnp.mean(sk, axis=0)
-                dots = sk @ mean
-                norms = jnp.sum(sk * sk, axis=1)
-                msq = jnp.sum(mean * mean)
-            else:
-                mean = jnp.mean(buf, axis=0)
-                if fl.score_backend == "kernel":
-                    dots, norms, msq = scored_reduce(buf, mean,
-                                                     interpret=interpret)
-                else:
-                    dots, norms, msq = scored_reduce_reference(buf, mean)
-            cos = dots / jnp.maximum(jnp.sqrt(norms) * jnp.sqrt(msq), 1e-12)
-            lam = (fl.chi + cos) / (fl.chi + 1.0)
-            # stale_scores: weight THIS round's buffer with the PREVIOUS
-            # round's scores (single-pass pod engine semantics)
-            lam_use = lam_prev if fl.stale_scores else lam
-            step = (alphas * lam_use) @ buf
-            w = w - fl.global_lr * fl.local_lr * step
-            return w, buf, part, lam_use, lam
-
-        return rnd
 
     def round_stacked(self, d_new: jnp.ndarray, active) -> jnp.ndarray:
         """d_new: (U, N) f32 update matrix; active: (U,) bool mask. Returns

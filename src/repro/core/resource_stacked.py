@@ -8,15 +8,35 @@ NumPy module remains the oracle and this module must agree with it exactly
 on kappa/feasibility and to <= 1e-6 relative on (f, p)
 (tests/test_online_stacked.py).
 
-The solve runs in float64 under a scoped ``jax.experimental.enable_x64``
-context (the repo keeps the global x64 flag off): the SCA's minimum-SNR term
-2^(Nb / (omega * t_left)) overflows float32 under tight deadlines, and the
-parity bar sits far below f32 resolution. Per-client early exits in the
-scalar algorithm (straggler breaks, frequency fallback, SCA convergence)
-become lane masks; iteration counts are the static
-``NetworkConfig.outer_iters`` / ``sca_iters``, so the whole alternating
-solve — all five initial power points of Algorithm 1's sweep — jits to one
-XLA program per network configuration.
+Two numeric backends (``resource_backend`` in the harness configs):
+
+  * ``"x64"`` (default, the parity oracle): the solve runs in float64 under
+    a scoped ``jax.experimental.enable_x64`` context (the repo keeps the
+    global x64 flag off). The SCA's minimum-SNR term
+    2^(Nb / (omega * t_left)) overflows float32 under tight deadlines, and
+    the scalar-oracle parity bar sits far below f32 resolution.
+  * ``"f32"``: the accelerator-native path. The minimum-SNR/minimum-power
+    step is reformulated in the log domain — ``log p_lo =
+    log(expm1(Nb ln2 / (omega t_left))) - log g`` compared against
+    ``log p_max`` — so the solve never materializes 2^x and compiles and
+    runs without x64 on TPU/GPU. Everything else is the identical formula
+    set in f32. Tolerance vs the x64 oracle is documented in DESIGN.md
+    ("Fused round"): kappa/feasibility match exactly away from the
+    ``_J_SLACK``/``_P_SLACK`` knife edges, (f, p) to ~1e-3 relative.
+
+``make_solver_core`` exposes the un-jitted solve body so the fused round
+(``core/round_fused.py``) can inline it into a larger single-dispatch
+program; ``optimize_clients_batched`` remains the host entry point and owns
+the x64 scope boundary: results are materialized to host NumPy *inside* the
+scope (device f64 arrays must never escape ``enable_x64()`` — later jnp ops
+outside the scope would silently downcast them) and checked finite, raising
+``ResourceSolveError`` naming the offending clients otherwise.
+
+Per-client early exits in the scalar algorithm (straggler breaks, frequency
+fallback, SCA convergence) become lane masks; iteration counts are the
+static ``NetworkConfig.outer_iters`` / ``sca_iters``, so the whole
+alternating solve — all five initial power points of Algorithm 1's sweep —
+jits to one XLA program per (network configuration, backend).
 
 Channel sampling is vectorized too, and ``np.random.Generator`` draws are
 stream-equivalent between one size-U array draw and U sequential scalar
@@ -39,6 +59,13 @@ from repro.core.resource import (_J_SLACK, _P_SLACK, FPP, ClientSystem,
                                  NetworkConfig, pathloss_linear)
 
 _LN2 = float(np.log(2.0))
+
+RESOURCE_BACKENDS = ("x64", "f32")
+
+
+class ResourceSolveError(RuntimeError):
+    """The batched solve produced non-finite kappa/f/p on feasible lanes
+    (f32 knife-edge regime — see the f32 notes in the module docstring)."""
 
 
 @dataclass
@@ -89,16 +116,22 @@ class ResourceDecisionBatch:
     e_total: np.ndarray     # (U,) float64
 
 
-@lru_cache(maxsize=8)
-def _make_solver(net_fields: tuple):
-    """Build (and cache) the jitted all-clients solve for one NetworkConfig.
+def make_solver_core(net: NetworkConfig, backend: str = "x64"):
+    """The all-clients solve as a pure (un-jitted) function.
 
-    The returned fn maps (c, s, f_max, p_max, e_bd, xi, gamma, n_params) —
-    all (U,) f64 except the scalar payload — to the six decision columns.
-    Every formula below mirrors the scalar module line-for-line; only the
-    control flow changes (breaks -> lane masks, init-point loop -> vmap).
+    Maps (c, s, f_max, p_max, e_bd, xi, gamma, n_params) — all (U,) arrays
+    of the backend's dtype except the scalar payload — to the six decision
+    columns. Every formula mirrors the scalar module line-for-line; only the
+    control flow changes (breaks -> lane masks, init-point loop -> vmap),
+    and on the f32 backend the minimum-power step runs in the log domain
+    (the lone f32-overflowing term — see the module docstring). The x64
+    variant must be traced under ``enable_x64``; ``core/round_fused.py``
+    inlines either variant into the one-dispatch round program.
     """
-    net = NetworkConfig(*net_fields)
+    if backend not in RESOURCE_BACKENDS:
+        raise ValueError(f"unknown resource backend {backend!r} "
+                         f"(expected one of {RESOURCE_BACKENDS})")
+    log_domain = backend == "f32"
     noise = net.noise_power
     fracs = np.array([1.0, 0.1, 0.01, 1e-3, 1e-4])
     ks = np.arange(1.0, net.kappa_max + 1)          # (K,) candidate kappas
@@ -133,17 +166,37 @@ def _make_solver(net_fields: tuple):
             val = cc * kappa * r / jnp.where(denom > 0, denom, 1.0)
             return jnp.where(denom > 0, val, jnp.inf)
 
+        def min_power(t_left, valid):
+            """(52c)/(11c): smallest p meeting the deadline at (kappa, f).
+
+            The direct form 2^(Nb/(omega*t_left)) - 1 overflows f32 for
+            tight deadlines; the log-domain form compares log p_lo against
+            log p_max and only exponentiates the clipped value, so the f32
+            backend never materializes the overflow."""
+            t_safe = jnp.where(valid, t_left, 1.0)
+            if not log_domain:
+                snr_min = 2.0 ** (nb / (net.omega * t_safe)) - 1.0
+                p_lo = snr_min / g
+                valid &= p_lo <= p_max * (1 + _P_SLACK)
+                return jnp.where(valid, jnp.minimum(p_lo, p_max), 1e-6), valid
+            a = nb * _LN2 / (net.omega * t_safe)    # log(1 + snr_min)
+            # log(expm1(a)): exact small-a form, overflow-free large-a form
+            log_snr = jnp.where(a > 10.0,
+                                a + jnp.log1p(-jnp.exp(-jnp.maximum(a, 10.0))),
+                                jnp.log(jnp.expm1(jnp.minimum(a, 10.0))))
+            log_p_lo = log_snr - jnp.log(g)
+            log_cap = jnp.log(p_max)
+            valid &= log_p_lo <= log_cap + jnp.log1p(_P_SLACK)
+            p_lo = jnp.exp(jnp.minimum(log_p_lo, log_cap))
+            return jnp.where(valid, p_lo, 1e-6), valid
+
         def sca_power(kappa, f, p0):
             """SCA (eqs. 50-52) with convergence/abort masks per lane."""
             e_cp = 0.5 * net.v * cc * kappa * f ** 2
             t_cp = cc * kappa / f
             t_left = net.t_th - t_cp
             valid = t_left > 0
-            snr_min = 2.0 ** (nb / (net.omega *
-                                    jnp.where(valid, t_left, 1.0))) - 1.0
-            p_lo = snr_min / g
-            valid &= p_lo <= p_max * (1 + _P_SLACK)
-            p_lo = jnp.where(valid, jnp.minimum(p_lo, p_max), 1e-6)
+            p_lo, valid = min_power(t_left, valid)
             p = jnp.maximum(jnp.maximum(jnp.minimum(p0, p_max), p_lo), 1e-6)
             done = jnp.zeros(valid.shape, bool)
             for _ in range(net.sca_iters):
@@ -231,28 +284,75 @@ def _make_solver(net_fields: tuple):
             bfeas |= sfeas[i]
         return bk, bf, bp, bfeas, bt, be
 
-    return jax.jit(solve)
+    return solve
+
+
+@lru_cache(maxsize=8)
+def _make_solver(net_fields: tuple, backend: str):
+    """Jitted-and-cached ``make_solver_core`` per (NetworkConfig, backend)."""
+    return jax.jit(make_solver_core(NetworkConfig(*net_fields), backend))
+
+
+def _check_finite(kappa, f, p, feas, backend: str) -> None:
+    """Feasible lanes must carry finite decisions; the f32 backend can lose
+    them at the ``_J_SLACK``/``_P_SLACK`` knife edges (documented contract:
+    raise, never hand non-finite kappa/f/p to the round loop)."""
+    bad = feas & ~(np.isfinite(kappa) & np.isfinite(f) & np.isfinite(p))
+    if bad.any():
+        lanes = np.flatnonzero(bad)[:8]
+        raise ResourceSolveError(
+            f"resource solve ({backend} backend) produced non-finite "
+            f"kappa/f/p on {int(bad.sum())} feasible client(s) "
+            f"(first lanes {lanes.tolist()}: "
+            f"kappa={kappa[lanes].tolist()}, f={f[lanes].tolist()}, "
+            f"p={p[lanes].tolist()}); for tight-deadline/knife-edge "
+            "configurations run resource_backend='x64'")
 
 
 def optimize_clients_batched(net: NetworkConfig, sysb: ClientSystemBatch,
-                             ch: ChannelBatch, n_params: int
-                             ) -> ResourceDecisionBatch:
-    """All-clients ``resource.optimize_client``: one jitted f64 solve."""
-    solver = _make_solver(dataclasses.astuple(net))
-    with enable_x64():
-        cols = (sysb.c, sysb.s, sysb.f_max, sysb.p_max, sysb.e_bd,
-                ch.xi, ch.gamma)
-        out = solver(*[jnp.asarray(a, jnp.float64) for a in cols],
-                     jnp.float64(n_params))
-        kappa, f, p, feas, t, e = [np.asarray(o) for o in out]
-    return ResourceDecisionBatch(kappa=kappa.astype(np.int64), f=f, p=p,
-                                 feasible=feas.astype(bool), t_total=t,
-                                 e_total=e)
+                             ch: ChannelBatch, n_params: int,
+                             backend: str = "x64") -> ResourceDecisionBatch:
+    """All-clients ``resource.optimize_client``: one jitted solve.
+
+    ``backend="x64"`` (default) is the scalar-parity oracle under scoped
+    ``enable_x64``; ``backend="f32"`` is the accelerator-native log-domain
+    solve. Either way the returned columns are **host NumPy float64/int64**:
+    the x64 scope boundary materializes every output inside the scope so no
+    f64 device array escapes it (escaped arrays silently downcast on the
+    next op once the scope closes)."""
+    if backend not in RESOURCE_BACKENDS:
+        raise ValueError(f"unknown resource backend {backend!r} "
+                         f"(expected one of {RESOURCE_BACKENDS})")
+    solver = _make_solver(dataclasses.astuple(net), backend)
+    cols = (sysb.c, sysb.s, sysb.f_max, sysb.p_max, sysb.e_bd,
+            ch.xi, ch.gamma)
+    if backend == "x64":
+        with enable_x64():
+            out = solver(*[jnp.asarray(a, jnp.float64) for a in cols],
+                         jnp.float64(n_params))
+            # scope boundary: host-materialize before the scope closes
+            out = [np.asarray(o) for o in out]
+            assert all(isinstance(o, np.ndarray) for o in out)
+            assert all(o.dtype == np.float64 for o in out[:3]), \
+                "x64 solve returned non-f64 decision columns"
+    else:
+        out = solver(*[jnp.asarray(a, jnp.float32) for a in cols],
+                     jnp.float32(n_params))
+        out = [np.asarray(o) for o in out]
+    kappa, f, p, feas, t, e = out
+    feas = feas.astype(bool)
+    _check_finite(kappa, f, p, feas, backend)
+    return ResourceDecisionBatch(kappa=kappa.astype(np.int64),
+                                 f=f.astype(np.float64),
+                                 p=p.astype(np.float64),
+                                 feasible=feas,
+                                 t_total=t.astype(np.float64),
+                                 e_total=e.astype(np.float64))
 
 
 def optimize_round_batched(rng: np.random.Generator, net: NetworkConfig,
-                           sysb: ClientSystemBatch, n_params: int
-                           ) -> ResourceDecisionBatch:
+                           sysb: ClientSystemBatch, n_params: int,
+                           backend: str = "x64") -> ResourceDecisionBatch:
     """One FL round: vectorized channel sampling + the batched solve (5)."""
     return optimize_clients_batched(net, sysb, sample_channels(rng, sysb),
-                                    n_params)
+                                    n_params, backend=backend)

@@ -119,10 +119,13 @@ def _draw_block(consts: StreamConsts, state: StreamState, counts,
     # all randomness for the block in 4 bulk draws (per-step threefry calls
     # dominate CPU wall-clock); the cohort key advances once per block
     key, k_br, k_genre, k_rank, k_top = jax.random.split(state.key, 5)
-    rnd = (jax.random.uniform(k_br, (L, U)),
-           jax.random.gumbel(k_genre, (L, U, G)),
-           jax.random.gumbel(k_rank, (L, U, P)),
-           jax.random.gumbel(k_top, (L, U, topk)))
+    # dtype pinned: under a scoped-x64 trace (the fused round's "x64"
+    # resource backend) the defaults would switch to f64 and draw different
+    # random bits than the f32 program
+    rnd = (jax.random.uniform(k_br, (L, U), jnp.float32),
+           jax.random.gumbel(k_genre, (L, U, G), jnp.float32),
+           jax.random.gumbel(k_rank, (L, U, P), jnp.float32),
+           jax.random.gumbel(k_top, (L, U, topk), jnp.float32))
     state = state._replace(key=key)
 
     def step(carry, rnd):
@@ -201,6 +204,16 @@ def _draw_block(consts: StreamConsts, state: StreamState, counts,
         out_x = jnp.zeros((U, width, SEQ_LEN), state.hist.dtype
                           ).at[uu[None, :], slots].set(payload, mode="drop")
     return st, out_x, out_y
+
+
+def warmup_deficit(state: StreamState, dataset: int) -> int:
+    """Worst-case warmup requests any user still owes before it can emit a
+    sample (0 once the cohort is warm). Host read of the device state; the
+    fused round (``core/round_fused.py``) requires this to be 0 at segment
+    entry since its in-scan draws run at static warmup=0."""
+    if dataset == 1:
+        return 0 if bool(np.asarray(state.has_last).all()) else 1
+    return max(0, SEQ_LEN - int(np.asarray(state.hist_len).min()))
 
 
 @dataclass
@@ -289,11 +302,8 @@ class StackedRequestStream:
             self._warm = {}
         if self._warm.get(dataset):
             warmup = 0
-        elif dataset == 1:
-            warmup = 0 if bool(np.asarray(self.state.has_last).all()) else 1
         else:
-            warmup = max(0, SEQ_LEN - int(np.asarray(
-                self.state.hist_len).min()))
+            warmup = warmup_deficit(self.state, dataset)
         self._warm[dataset] = warmup == 0
         self.state, xs, ys = _draw_block(
             self.consts, self.state, jnp.asarray(counts, jnp.int32),

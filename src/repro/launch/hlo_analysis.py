@@ -308,6 +308,40 @@ def top_traffic(txt: str, n: int = 12) -> list:
     return out[:n]
 
 
+def while_trip_counts(txt: str) -> List[int]:
+    """``known_trip_count`` of every while op in the module, descending.
+    (XLA annotates whiles lowered from ``lax.scan``/unrolled loops with
+    their static trip count in the backend config.)"""
+    return sorted((int(t) for t in _TRIP_RE.findall(txt)), reverse=True)
+
+
+def dispatch_report(txt: str, rounds_per_dispatch: int = None) -> dict:
+    """Single-executable verification for the fused round engine.
+
+    One compiled XLA module is one host->device dispatch per call, so the
+    report counts the module's ENTRY computations (must be 1 — a multi-step
+    host program would be several modules) and lists the while trip counts,
+    which must include ``rounds_per_dispatch`` when given: the
+    scan-over-rounds lowers to a while of exactly that trip, proving the k
+    rounds really live inside the one executable. ``bench_online.py`` embeds
+    this report in the bench-gate JSON artifact."""
+    entries = sum(1 for line in txt.splitlines() if line.startswith("ENTRY"))
+    modules = sum(1 for line in txt.splitlines()
+                  if line.startswith("HloModule"))
+    trips = while_trip_counts(txt)
+    report = {"entry_computations": entries,
+              "hlo_modules": modules,
+              "computations": len(parse_module(txt)),
+              "while_trip_counts": trips[:16],
+              "single_dispatch": entries == 1 and modules == 1}
+    if rounds_per_dispatch is not None:
+        report["rounds_per_dispatch"] = int(rounds_per_dispatch)
+        report["scan_carries_rounds"] = int(rounds_per_dispatch) in trips \
+            or int(rounds_per_dispatch) == 1
+        report["single_dispatch"] &= report["scan_carries_rounds"]
+    return report
+
+
 def analyze_hlo(txt: str, seq_len: int = 0) -> Analysis:
     comps = parse_module(txt)
     entry = None

@@ -1,0 +1,65 @@
+"""Every benchmark entry point must run as a plain script from the repo root
+(``python benchmarks/<x>.py``) with NO PYTHONPATH set — regression for the
+``ModuleNotFoundError: No module named 'benchmarks'`` crash: scripts executed
+by path get ``benchmarks/`` (not the repo root) as ``sys.path[0]``, so each
+entry point carries a repo-root + ``src/`` sys.path shim.
+
+``--help`` exercises exactly the crash surface (module import + argparse
+wiring) without paying for a benchmark run; the subprocesses are spawned
+concurrently (interpreter + jax import dominate the wall clock).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+ENTRY_POINTS = sorted(
+    p.relative_to(ROOT) for p in (ROOT / "benchmarks").glob("*.py")
+    if p.name != "common.py")
+
+
+def test_all_entry_points_enumerated():
+    # every benchmarks/*.py except the common library is an entry point; a
+    # new script missing its __main__ block would silently drop out of the
+    # CLI sweep below, so pin the count
+    assert len(ENTRY_POINTS) == 11
+    for p in ENTRY_POINTS:
+        text = (ROOT / p).read_text()
+        assert "__main__" in text, f"{p} has no __main__ block"
+
+
+def test_benchmark_cli_help_from_repo_root():
+    """All entry points' ``--help`` exits 0 from the repo root without
+    PYTHONPATH (concurrent Popen — serial startup would take ~1 min)."""
+    env = {k: v for k, v in os.environ.items() if k != "PYTHONPATH"}
+    env["JAX_PLATFORMS"] = "cpu"
+    procs = [(p, subprocess.Popen(
+        [sys.executable, str(p), "--help"], cwd=ROOT, env=env,
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+        for p in ENTRY_POINTS]
+    failures = []
+    for p, proc in procs:
+        out, err = proc.communicate(timeout=120)
+        if proc.returncode != 0:
+            failures.append(f"{p}: rc={proc.returncode}\n{err}")
+        elif "usage:" not in out.lower():
+            failures.append(f"{p}: no usage text in --help output:\n{out}")
+    assert not failures, "\n---\n".join(failures)
+
+
+@pytest.mark.parametrize("script", ["run.py", "bench_online.py"])
+def test_benchmark_cli_help_from_other_cwd(tmp_path, script):
+    """The shim resolves paths from ``__file__``, not CWD — entry points must
+    also work when invoked by absolute path from an unrelated directory."""
+    env = {k: v for k, v in os.environ.items() if k != "PYTHONPATH"}
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "benchmarks" / script), "--help"],
+        cwd=tmp_path, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr

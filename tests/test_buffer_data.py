@@ -60,6 +60,59 @@ def test_single_commit_larger_than_capacity_keeps_last():
     assert list(buf.dataset()[1]) == [25, 26, 27, 28]
 
 
+def test_sharded_buffer_capacity_and_wraparound_device_arrivals():
+    """Mesh-sharded ``StackedOnlineBuffer`` driven by the fused round's
+    on-device Binomial arrival draw (``round_fused.draw_counts``): an
+    exact-capacity fill, a burst larger than capacity, and multi-round
+    wrap-around must all leave the sharded state bit-identical to the
+    per-client ``OnlineBuffer`` oracle fed the same counts."""
+    import jax
+
+    from repro.core.buffer_stacked import StackedOnlineBuffer
+    from repro.core.round_fused import draw_counts, fused_base_key
+
+    U, width = 4, 6
+    caps = np.array([4, 5, 6, 6])       # cap == width lanes hit the
+    feat = (3,)                         # exact-capacity boundary; cap <
+    mesh = jax.make_mesh((1, 1), ("data", "model"))   # width lanes overflow
+    sbuf = StackedOnlineBuffer.create(caps, feat, 100, stage_capacity=width,
+                                      dtype=np.float32, mesh=mesh)
+    assert sbuf.mesh is not None
+    oracles = [OnlineBuffer.create(int(c), feat, 100, dtype=np.float32)
+               for c in caps]
+    key = fused_base_key(123)
+    sample = 0
+    for rnd in range(6):
+        # round 0: p_ac = 1 -> every count == width (the boundary bursts);
+        # afterwards: genuine on-device Binomial thinning
+        p_ac = np.ones(U, np.float32) if rnd == 0 \
+            else np.full(U, 0.7, np.float32)
+        counts = np.asarray(draw_counts(
+            jax.random.fold_in(key, rnd), p_ac, width))
+        xs = np.zeros((U, width) + feat, np.float32)
+        ys = np.zeros((U, width), np.int64)
+        for u in range(U):
+            n = int(counts[u])
+            xs[u, :n] = np.arange(sample, sample + n
+                                  ).reshape(n, 1) + np.zeros(feat)
+            ys[u, :n] = np.arange(sample, sample + n) % 100
+            if n:
+                oracles[u].stage(xs[u, :n], ys[u, :n])
+            oracles[u].commit()
+            sample += n
+        sbuf.stage(xs, ys, counts)
+        sbuf.commit()
+        if rnd == 0:
+            assert list(sbuf.sizes) == [4, 5, 6, 6]   # full at capacity
+        for u, oracle in enumerate(oracles):
+            ox, oy = oracle.dataset()
+            sx, sy = sbuf.dataset(u)
+            assert np.array_equal(ox, sx), (rnd, u)
+            assert np.array_equal(oy, sy), (rnd, u)
+            assert oracle.size == sbuf.sizes[u]
+            assert oracle.head == sbuf.heads[u], (rnd, u)
+
+
 def test_empty_commit_is_noop():
     buf = OnlineBuffer.create(4, (1,), 10)
     buf.stage(np.zeros((2, 1), np.float32), np.array([7, 8]))

@@ -7,6 +7,8 @@ Parity bars (the acceptance criteria of the online-pipeline PR):
   * stacked FIFO commits == ``core/buffer.py`` oracle state exactly over
     multi-round runs with wrap-around.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -14,7 +16,9 @@ from repro.core.buffer import OnlineBuffer
 from repro.core.buffer_stacked import StackedOnlineBuffer
 from repro.core.resource import (ChannelState, NetworkConfig, make_clients,
                                  optimize_client, sample_channel)
-from repro.core.resource_stacked import (optimize_clients_batched,
+from repro.core.resource_stacked import (ResourceSolveError, _check_finite,
+                                         make_solver_core,
+                                         optimize_clients_batched,
                                          sample_channels, stack_clients)
 
 NET = NetworkConfig()
@@ -75,6 +79,103 @@ def test_batched_decisions_satisfy_constraints():
     assert np.all(dec.p[m] <= sysb.p_max[m] * (1 + 1e-9))
     assert np.all(dec.t_total[m] <= NET.t_th * (1 + 1e-5))
     assert np.all(dec.e_total[m] <= sysb.e_bd[m] * (1 + 1e-5))
+
+
+# ---------------------------------------------------------------------------
+# f32 (log-domain) resource backend vs the x64 parity oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_params", [18_000, 3_900_000])
+def test_f32_backend_matches_x64(n_params):
+    """The documented DESIGN.md tolerance of the f32 log-domain solve vs the
+    x64 oracle. The solve makes discrete choices (Lemma 1's floor, the SCA
+    interval-endpoint step, the 5-point init sweep), so f32 rounding can
+    legitimately flip a few lanes to a *different valid optimum* — the
+    contract is therefore statistical + feasibility-exact, not bitwise:
+      * feasibility classification EXACT; kappa flips on <= 10% of lanes,
+        and a flipped lane still carries a valid in-range kappa (a
+        different init point of Algorithm 1's sweep won the tie);
+      * MEDIAN relative diff on (f, p, e_total) <= 1e-3 and t_total
+        essentially exact (it is pinned at the deadline);
+      * every f32 decision satisfies the problem's constraints;
+      * both backends return host float64 / int64 columns (the x64
+        scope-boundary contract)."""
+    rng = np.random.default_rng(3)
+    sysb = stack_clients(make_clients(rng, 64))
+    chb = sample_channels(rng, sysb)
+    dx = optimize_clients_batched(NET, sysb, chb, n_params, backend="x64")
+    df = optimize_clients_batched(NET, sysb, chb, n_params, backend="f32")
+    for d in (dx, df):
+        assert d.kappa.dtype == np.int64
+        assert d.f.dtype == np.float64 and d.p.dtype == np.float64
+        assert isinstance(d.f, np.ndarray)
+    np.testing.assert_array_equal(df.feasible, dx.feasible)
+    flips = df.kappa != dx.kappa
+    assert flips.mean() <= 0.10, np.flatnonzero(flips)
+    assert np.all((df.kappa[flips] >= 1)
+                  & (df.kappa[flips] <= NET.kappa_max))
+    m = dx.feasible & ~flips
+    assert m.any()
+
+    def med_rel(a, b):
+        return float(np.median(np.abs(a[m] - b[m])
+                               / np.maximum(np.abs(b[m]), 1e-30)))
+
+    assert med_rel(df.f, dx.f) <= 1e-3
+    assert med_rel(df.p, dx.p) <= 1e-3
+    assert med_rel(df.e_total, dx.e_total) <= 1e-3
+    np.testing.assert_allclose(df.t_total[m], dx.t_total[m], rtol=1e-6)
+    mm = df.feasible
+    assert np.all(df.t_total[mm] <= NET.t_th * (1 + 1e-4))
+    assert np.all(df.e_total[mm] <= sysb.e_bd[mm] * (1 + 1e-4))
+    assert np.all(df.f[mm] <= sysb.f_max[mm] * (1 + 1e-5))
+    assert np.all(df.p[mm] <= sysb.p_max[mm] * (1 + 1e-5))
+
+
+@pytest.mark.parametrize("t_th", [0.5, 1.5])
+def test_f32_backend_tight_deadline_no_overflow(t_th):
+    """Deadlines tight enough that the direct minimum-SNR form
+    2^(Nb/(omega*t)) overflows float32 outright: the log-domain f32 solve
+    must still return finite columns and the same straggler classification
+    as the x64 oracle (overflowing lanes are exactly the infeasible ones —
+    log p_lo >> log p_max)."""
+    net = dataclasses.replace(NET, t_th=t_th)
+    n_params = 3_900_000
+    nb = n_params * 33.0
+    # the boundary state this test pins down: the direct form is inf in f32
+    assert np.isinf(np.float32(2.0) ** np.float32(nb / (net.omega * t_th)))
+    rng = np.random.default_rng(7)
+    sysb = stack_clients(make_clients(rng, 64))
+    chb = sample_channels(rng, sysb)
+    dx = optimize_clients_batched(net, sysb, chb, n_params, backend="x64")
+    df = optimize_clients_batched(net, sysb, chb, n_params, backend="f32")
+    for col in (df.kappa, df.f, df.p, df.t_total, df.e_total):
+        assert np.isfinite(col).all()
+    np.testing.assert_array_equal(df.feasible, dx.feasible)
+    assert np.abs(df.kappa - dx.kappa).max(initial=0) <= 1
+
+
+def test_unknown_resource_backend_raises():
+    rng = np.random.default_rng(0)
+    sysb = stack_clients(make_clients(rng, 4))
+    chb = sample_channels(rng, sysb)
+    with pytest.raises(ValueError, match="unknown resource backend"):
+        optimize_clients_batched(NET, sysb, chb, 18_000, backend="f64")
+    with pytest.raises(ValueError, match="unknown resource backend"):
+        make_solver_core(NET, backend="bf16")
+
+
+def test_nonfinite_feasible_lane_raises():
+    """The scope-boundary guard: a feasible lane carrying NaN/inf must raise
+    ``ResourceSolveError`` naming the lanes, never flow into the round."""
+    kappa = np.array([2.0, np.nan, 1.0, 3.0])
+    f = np.array([1e9, 1e9, np.inf, 1e9])
+    p = np.ones(4)
+    feas = np.array([True, True, True, False])
+    with pytest.raises(ResourceSolveError, match=r"\[1, 2\]"):
+        _check_finite(kappa, f, p, feas, "f32")
+    # non-finite on an INfeasible lane is fine (masked lanes carry junk)
+    _check_finite(kappa, f, p, np.array([True, False, False, False]), "f32")
 
 
 # ---------------------------------------------------------------------------

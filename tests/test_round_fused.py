@@ -1,0 +1,222 @@
+"""The fused single-dispatch round (``core/round_fused``) vs the
+multi-dispatch engine.
+
+The load-bearing check is *replay bit-parity*: the fused engine's per-round
+device draws (``round_keys``/``draw_counts``/``draw_shadowing_db``/
+``draw_slots``) are public, so the EXISTING multi-dispatch components —
+stacked request stream, FIFO stage/commit, scoped-x64 resource solve,
+vmapped local SGD, scored server round — can be driven with exactly the
+draws the fused program consumes. With ``resource_backend="x64"`` the two
+paths must then be bit-identical: same losses, same participants, same
+final weights, same buffer and stream state. Everything else (f32 backend
+tolerance, segmentation/resume invariance, the one-executable HLO claim)
+layers on top of that anchor.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import enable_x64
+
+from benchmarks.common import (ExperimentConfig, build_fused_engine,
+                               checkpoint_path, run_experiment,
+                               run_pod_online_experiment,
+                               run_vectorized_experiment)
+from repro.core import round_fused as rf
+from repro.core.client import make_vmapped_local_train
+from repro.core.resource import pathloss_linear
+from repro.core.resource_stacked import (ChannelBatch, ResourceSolveError,
+                                         optimize_clients_batched)
+from repro.data.video_caching import make_population
+from repro.data.video_caching_stacked import StackedRequestStream
+from repro.models.small import small_loss
+
+R = 4
+XC = ExperimentConfig(model="mlp", dataset=2, num_clients=8, rounds=R,
+                      capacity=(12, 24), arrivals=4, batch=8, seed=5,
+                      request_backend="stacked", round_backend="fused",
+                      resource_backend="x64", rounds_per_dispatch=R)
+
+
+@pytest.fixture(scope="module")
+def x64_run():
+    """One R-round fused segment on the x64 parity backend: (engine, final
+    carry, host outs). Module-scoped — the compiled segment is reused by the
+    replay, f32 and HLO tests."""
+    eng, s = build_fused_engine("osafl", XC)
+    carry = eng.init_carry(s.server, s.sbuf, s.rstream, 0)
+    carry, outs = eng.run_segment(carry, R)
+    return eng, carry, jax.tree.map(np.asarray, outs)
+
+
+def test_replay_bit_parity_x64(x64_run):
+    """Drive the multi-dispatch components with the fused engine's device
+    draws: every per-round output and every piece of final state must be
+    bit-equal to the fused x64 segment."""
+    _, carry, outs = x64_run
+    eng2, s2 = build_fused_engine("osafl", XC)
+    local_step = make_vmapped_local_train(
+        s2.grad_fn, s2.fl.local_lr, s2.fl.kappa_max, prox_mu=0.0)
+    xi = pathloss_linear(s2.sysb.distance)
+    losses, accs, parts = [], [], []
+    for t in range(R):
+        k_arr, k_chan, k_slots = rf.round_keys(eng2.base_key, t)
+        counts = np.asarray(rf.draw_counts(k_arr, eng2.p_ac, XC.arrivals))
+        s2.sbuf.stage(*s2.rstream.draw(counts, XC.dataset, XC.arrivals))
+        s2.sbuf.commit()
+        # the dB->linear conversion must happen on device in f64 (host numpy
+        # ** can differ in the last ulp) — same contract as the fused body
+        with enable_x64():
+            gamma = np.asarray(10.0 ** (
+                rf.draw_shadowing_db(k_chan, s2.U).astype(jnp.float64)
+                / 10.0))
+        dec = optimize_clients_batched(
+            s2.net, s2.sysb, ChannelBatch(xi=xi, gamma=gamma), s2.n_params,
+            backend="x64")
+        kappas, active = dec.kappa, dec.kappa >= 1
+        st = s2.sbuf.state
+        slots = np.asarray(rf.draw_slots(k_slots, st.size, st.head, st.cap,
+                                         (s2.fl.kappa_max, XC.batch)))
+        d, _ = local_step(s2.server.params, s2.sbuf.gather(slots),
+                          jnp.asarray(kappas))
+        s2.server.round_stacked(s2.codec.flatten_stacked(d), active)
+        loss, m = small_loss(s2.server.params, s2.test_batch, s2.model)
+        losses.append(float(loss))
+        accs.append(float(m["accuracy"]))
+        parts.append(int(active.sum()))
+    assert outs["test_loss"].tolist() == np.array(
+        losses, np.float32).tolist()
+    assert outs["test_acc"].tolist() == np.array(accs, np.float32).tolist()
+    assert outs["participants"].tolist() == parts
+    assert np.array_equal(np.asarray(carry.w), np.asarray(s2.server.w))
+    assert np.array_equal(np.asarray(carry.d_buffer),
+                          np.asarray(s2.server.d_buffer))
+    assert np.array_equal(np.asarray(carry.buf.y),
+                          np.asarray(s2.sbuf.state.y))
+    assert np.array_equal(np.asarray(carry.buf.x),
+                          np.asarray(s2.sbuf.state.x))
+    assert np.array_equal(np.asarray(carry.stream.key),
+                          np.asarray(s2.rstream.state.key))
+    assert np.array_equal(outs["lam_use"][-1],
+                          np.asarray(s2.server.last_scores, np.float32))
+
+
+def test_f32_backend_matches_x64(x64_run):
+    """The f32 log-domain resource solve must agree with the x64 oracle on
+    the default (non-knife-edge) population: identical kappa decisions ->
+    identical participant sets and training trajectory to f32 eval noise
+    (documented bound: |test_loss| diff <= 1e-5 relative; exact equality is
+    typical because both programs draw identical f32 bits)."""
+    _, carry, outs = x64_run
+    eng, s = build_fused_engine(
+        "osafl", dataclasses.replace(XC, resource_backend="f32"))
+    c32 = eng.init_carry(s.server, s.sbuf, s.rstream, 0)
+    c32, o32 = eng.run_segment(c32, R)
+    o32 = jax.tree.map(np.asarray, o32)
+    assert o32["participants"].tolist() == outs["participants"].tolist()
+    np.testing.assert_allclose(o32["test_loss"], outs["test_loss"],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c32.w), np.asarray(carry.w),
+                               rtol=1e-4, atol=1e-5)
+    assert not o32["bad_solve"].any()
+
+
+def test_segment_invariance():
+    """rounds [0, R) as one segment vs two segments of R/2: the absolute-
+    round keying makes the split invisible — bit-identical outputs."""
+    eng, s = build_fused_engine(
+        "osafl", dataclasses.replace(XC, resource_backend="f32"))
+    carry = eng.init_carry(s.server, s.sbuf, s.rstream, 0)
+    carry, o_full = eng.run_segment(carry, R)
+    eng2, s2 = build_fused_engine(
+        "osafl", dataclasses.replace(XC, resource_backend="f32"))
+    c2 = eng2.init_carry(s2.server, s2.sbuf, s2.rstream, 0)
+    c2, o_a = eng2.run_segment(c2, R // 2)
+    c2, o_b = eng2.run_segment(c2, R // 2)
+    o_split = jax.tree.map(
+        lambda a, b: np.concatenate([np.asarray(a), np.asarray(b)]),
+        o_a, o_b)
+    for k in ("test_loss", "test_acc", "participants"):
+        assert np.array_equal(np.asarray(o_full[k]), o_split[k]), k
+    assert np.array_equal(np.asarray(carry.w), np.asarray(c2.w))
+    assert np.array_equal(np.asarray(carry.t), np.asarray(c2.t))
+
+
+def test_harness_fused_checkpoint_resume(tmp_path):
+    """The fused harness truncates segments at checkpoint boundaries and a
+    resume from a mid-run RunState snapshot continues bit-exactly."""
+    fxc = dataclasses.replace(XC, resource_backend="f32")
+    da, db = tmp_path / "a", tmp_path / "b"
+    ha = run_vectorized_experiment("osafl", fxc, eval_samples=64,
+                                   save_every_k=R, checkpoint_dir=da)
+    run_vectorized_experiment("osafl", fxc, eval_samples=64,
+                              save_every_k=2, checkpoint_dir=db)
+    hb = run_vectorized_experiment("osafl", fxc, eval_samples=64,
+                                   save_every_k=2, checkpoint_dir=db,
+                                   resume_from=checkpoint_path(db, 2))
+    assert [h["test_loss"] for h in ha] == [h["test_loss"] for h in hb]
+    assert [h["participants"] for h in ha] == \
+        [h["participants"] for h in hb]
+    # and the fused harness agrees with the direct-engine segment
+    eng, s = build_fused_engine("osafl", fxc, eval_samples=64)
+    carry = eng.init_carry(s.server, s.sbuf, s.rstream, 0)
+    _, outs = eng.run_segment(carry, R)
+    assert [h["test_loss"] for h in ha] == \
+        np.asarray(outs["test_loss"]).astype(float).tolist()
+
+
+def test_single_dispatch_hlo(x64_run):
+    """The one-dispatch claim, checked on the optimized HLO: one module, one
+    entry computation, and a while loop whose trip count is the segment
+    length (the rounds scan stayed a scan)."""
+    from repro.launch.hlo_analysis import dispatch_report
+    eng, _, _ = x64_run
+    rep = dispatch_report(eng.compiled_text(R), rounds_per_dispatch=R)
+    assert rep["hlo_modules"] == 1
+    assert rep["entry_computations"] == 1
+    assert rep["scan_carries_rounds"], rep["while_trip_counts"]
+    assert rep["single_dispatch"]
+
+
+def test_check_outputs_raises_on_bad_solve():
+    with pytest.raises(ResourceSolveError, match=r"round\(s\) \[1, 3\]"):
+        rf.FusedEngine.check_outputs(
+            {"bad_solve": np.array([False, True, False, True])})
+    rf.FusedEngine.check_outputs({"bad_solve": np.zeros(4, bool)})
+
+
+def test_fused_validation_errors():
+    with pytest.raises(ValueError, match="OSAFL scored round only"):
+        build_fused_engine("fedavg", dataclasses.replace(
+            XC, rounds_per_dispatch=1))
+    with pytest.raises(ValueError, match="stacked"):
+        build_fused_engine("osafl", dataclasses.replace(
+            XC, request_backend="python"))
+    with pytest.raises(ValueError, match="resource backend"):
+        build_fused_engine("osafl", dataclasses.replace(
+            XC, resource_backend="f16"))
+    with pytest.raises(ValueError, match="rounds_per_dispatch"):
+        build_fused_engine("osafl", dataclasses.replace(
+            XC, rounds_per_dispatch=0))
+    with pytest.raises(ValueError, match="round_backend"):
+        run_vectorized_experiment("osafl", dataclasses.replace(
+            XC, round_backend="turbo"))
+    oracle_fused = dataclasses.replace(XC, request_backend="python")
+    with pytest.raises(ValueError, match="dispatch"):
+        run_experiment("osafl", oracle_fused)
+    with pytest.raises(ValueError, match="dispatch"):
+        run_pod_online_experiment("osafl", oracle_fused)
+
+
+def test_init_carry_refuses_cold_stream():
+    """The in-scan request draw runs at static warmup=0, so a cohort whose
+    sliding windows are still cold must be rejected up front."""
+    eng, s = build_fused_engine("osafl", XC)
+    cat, streams = make_population(XC.seed, XC.num_clients)
+    cold = StackedRequestStream.from_streams(cat, streams, seed=XC.seed + 1)
+    with pytest.raises(ValueError, match="warm"):
+        eng.init_carry(s.server, s.sbuf, cold, 0)
