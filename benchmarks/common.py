@@ -139,6 +139,17 @@ class ExperimentConfig:
     rounds_per_dispatch: int = 1      # fused backend: rounds folded into one
                                       # device dispatch between eval/
                                       # checkpoint boundaries
+    cohort_size: int = 0              # C: sparse active-slot pool capacity
+                                      # (core/cohort.py). 0 = dense (every
+                                      # registered user materialized); >0 =
+                                      # only C slots are round-live and
+                                      # per-user tables carry the rest.
+                                      # cohort_size=num_clients is bit-exact
+                                      # vs the dense engines (the parity
+                                      # anchor, tests/test_cohort.py).
+    participation: float = 1.0        # round-active fraction of the pool
+                                      # (Dinh et al. partial participation;
+                                      # <1 needs cohort_size>0)
     cell_radius_m: float = 600.0      # milder than Fig.3's 1 km so the
                                       # reduced-round runs see participants
 
@@ -169,6 +180,11 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400,
             "run_experiment only supports round_backend='dispatch'; the "
             f"fused round needs run_vectorized_experiment "
             f"(got {xc.round_backend!r})")
+    if xc.cohort_size or xc.participation != 1.0:
+        raise ValueError(
+            "run_experiment is the dense per-client oracle; the sparse "
+            "slot-pool engine (cohort_size/participation) needs "
+            "run_vectorized_experiment or run_pod_online_experiment")
     model = xc.model
     cat, streams = make_population(xc.seed, xc.num_clients, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)
@@ -270,6 +286,19 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
     stacked_req = xc.request_backend == "stacked"
     model = xc.model
     U = xc.num_clients
+    sparse = xc.cohort_size > 0
+    C = xc.cohort_size if sparse else U
+    if sparse and not 1 <= C <= U:
+        raise ValueError(f"cohort_size must satisfy 1 <= C <= num_clients "
+                         f"(got C={C}, num_clients={U})")
+    if not 0.0 < xc.participation <= 1.0:
+        raise ValueError(
+            f"participation must lie in (0, 1] (got {xc.participation})")
+    if xc.participation < 1.0 and not sparse:
+        raise ValueError(
+            "participation sampling needs the slot-pool engine: set "
+            "cohort_size (cohort_size=num_clients keeps every user "
+            "resident and only samples the round-active subset)")
     cat, streams = make_population(xc.seed, U, topk=xc.topk)
     rstream = (StackedRequestStream.from_streams(cat, streams, seed=xc.seed)
                if stacked_req else None)
@@ -277,22 +306,45 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
     feat_shape, dtype = dataset_layout(xc.dataset)
     lo, hi = xc.capacity
     caps = rng.integers(lo, max(hi, lo + 1), size=U)
+    server_fl = FLConfig(num_clients=U, local_lr=xc.local_lr,
+                         global_lr=(xc.global_lr
+                                    if alg in ("osafl", "afa_cd") else 1.0),
+                         algorithm=alg, engine="stacked",
+                         request_backend=xc.request_backend,
+                         round_backend=xc.round_backend,
+                         resource_backend=xc.resource_backend,
+                         cohort_size=xc.cohort_size,
+                         participation=xc.participation,
+                         stale_scores=stale_scores)
+    server = make_server(init_small(jax.random.PRNGKey(xc.seed), xc.model),
+                         server_fl, U, seed=xc.seed,
+                         mesh=mesh if sparse else None)
+    if sparse:
+        # initial residents: the first C users, in slot order — at C = U the
+        # pool is the identity map (the dense-parity anchor)
+        server.admit(np.arange(C))
+    cohort0 = server.cohort if sparse else np.arange(U)
     sbuf = StackedOnlineBuffer.create(
-        caps, feat_shape, 100, stage_capacity=xc.arrivals, dtype=dtype,
-        mesh=mesh)
-    # initial fill: FIFO commits compose, so ingest the cap_u seed samples
-    # in arrival-width chunks rather than sizing the staging area (kept for
-    # the whole run) for caps.max()
+        caps[cohort0] if sparse else caps, feat_shape, 100,
+        stage_capacity=xc.arrivals, dtype=dtype, mesh=mesh,
+        # slot storage must fit any later-admitted resident's capacity
+        depth=int(caps.max()) if sparse else None)
+    # initial fill (residents only): FIFO commits compose, so ingest the
+    # cap_u seed samples in arrival-width chunks rather than sizing the
+    # staging area (kept for the whole run) for caps.max()
     if stacked_req:
         filled = np.zeros(U, np.int64)
-        while (filled < caps).any():
-            chunk = np.minimum(caps - filled, xc.arrivals)
-            sbuf.stage(*rstream.draw(chunk, xc.dataset, xc.arrivals))
+        target = np.zeros(U, np.int64)
+        target[cohort0] = caps[cohort0]
+        while (filled < target).any():
+            chunk = np.minimum(target - filled, xc.arrivals)
+            xs, ys, cnt = rstream.draw(chunk, xc.dataset, xc.arrivals)
+            sbuf.stage(xs[cohort0], ys[cohort0], cnt[cohort0])
             sbuf.commit()
             filled += chunk
     else:
-        init = [_draw(s, int(c), xc.dataset) for s, c in zip(streams, caps)]
-        for off in range(0, int(caps.max()), xc.arrivals):
+        init = [_draw(streams[u], int(caps[u]), xc.dataset) for u in cohort0]
+        for off in range(0, int(caps[cohort0].max()), xc.arrivals):
             chunk = [(x[off:off + xc.arrivals], y[off:off + xc.arrivals])
                      if off < len(y) else None for x, y in init]
             sbuf.stage(*pad_arrival_batch(chunk, xc.arrivals, xc.dataset))
@@ -311,15 +363,7 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
             "y": jnp.asarray(np.concatenate([t[1] for t in tests]))}
 
     grad_fn = jax.grad(lambda p, b: small_loss(p, b, model)[0])
-    params = init_small(jax.random.PRNGKey(xc.seed), model)
-    glr = xc.global_lr if alg in ("osafl", "afa_cd") else 1.0
-    fl = FLConfig(num_clients=U, local_lr=xc.local_lr, global_lr=glr,
-                  algorithm=alg, engine="stacked",
-                  request_backend=xc.request_backend,
-                  round_backend=xc.round_backend,
-                  resource_backend=xc.resource_backend,
-                  stale_scores=stale_scores)
-    server = make_server(params, fl, U, seed=xc.seed)
+    fl = server_fl
 
     net = NetworkConfig()
     sysb = stack_clients(make_clients(rng, U,
@@ -332,7 +376,11 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
         codec=server.codec,
         weights_alg=alg in ("fedavg", "fedprox", "feddisco"),
         prox_mu=fl.fedprox_mu if alg == "fedprox" else 0.0,
-        net=net, sysb=sysb, n_params=n_params)
+        net=net, sysb=sysb, n_params=n_params,
+        # sparse-cohort bookkeeping (dense: sparse=False, C=U, no resample)
+        sparse=sparse, C=C,
+        m_active=max(1, int(round(xc.participation * C))),
+        resample=sparse and (C < U or xc.participation < 1.0))
 
 
 def _resume_stacked(s: SimpleNamespace, snap: dict) -> tuple:
@@ -349,28 +397,71 @@ def _resume_stacked(s: SimpleNamespace, snap: dict) -> tuple:
     return list(snap["history"]), int(snap["next_round"])
 
 
+def _gather_sys(sysb, rows):
+    """Cohort rows of a ``ClientSystemBatch`` (every field is (U,))."""
+    return dataclasses.replace(
+        sysb, **{f.name: getattr(sysb, f.name)[rows]
+                 for f in dataclasses.fields(sysb)})
+
+
 def _draw_round_inputs(s: SimpleNamespace, xc: ExperimentConfig) -> tuple:
-    """One round of host-side draws, in the canonical order: arrival counts
-    + samples (staged and committed FIFO), the resource-optimizer kappas,
-    the straggler mask, and the local-SGD batch slots. Returns
-    ``(req_s, kappas, active, slots)``."""
+    """One round of host-side draws, in the canonical order: (sparse only)
+    the round-active cohort sample + slot-pool admissions, then arrival
+    counts + samples (staged and committed FIFO), the resource-optimizer
+    kappas, the straggler mask, and the local-SGD batch slots. Returns
+    ``(req_s, kappas, active, slots)`` — all arrays slot-indexed (width C;
+    the dense path is the C = U identity). At cohort_size=num_clients with
+    full participation the sparse branch consumes the host RNG in exactly
+    the dense order (identity gathers, no cohort sample), which is what
+    makes the parity anchor bit-exact."""
     t0 = time.perf_counter()
-    counts = binomial_arrivals_batched(s.rng, xc.arrivals, s.p_ac)
+    sel = None
+    if s.sparse:
+        if s.resample:
+            sel = np.sort(s.rng.choice(s.U, size=s.m_active, replace=False))
+            res = s.server.admit(sel)
+            if res.newly.any():
+                # a reassigned slot loses the evicted resident's dataset:
+                # reset its FIFO window to the incoming user's capacity
+                s.sbuf.reset_rows(res.slots[res.newly],
+                                  s.caps[sel[res.newly]])
+        cohort = s.server.cohort
+        p_ac = s.p_ac[cohort]
+    else:
+        cohort, p_ac = None, s.p_ac
+    counts = binomial_arrivals_batched(s.rng, xc.arrivals, p_ac)
     if s.stacked_req:
-        arrivals = s.rstream.draw(counts, xc.dataset, xc.arrivals)
+        if s.sparse:
+            # the stacked stream state stays (U,)-wide; non-residents draw
+            # a zero count so their streams do not advance
+            full = np.zeros(s.U, counts.dtype)
+            full[cohort] = counts
+            xs, ys, cnt = s.rstream.draw(full, xc.dataset, xc.arrivals)
+            arrivals = (xs[cohort], ys[cohort], cnt[cohort])
+        else:
+            arrivals = s.rstream.draw(counts, xc.dataset, xc.arrivals)
         jax.block_until_ready(arrivals[1])   # honest request_gen_s
     else:
-        arrivals = draw_arrival_batch(s.streams, counts, xc.dataset,
+        streams = ([s.streams[u] for u in cohort] if s.sparse
+                   else s.streams)
+        arrivals = draw_arrival_batch(streams, counts, xc.dataset,
                                       width=xc.arrivals)
     req_s = time.perf_counter() - t0
     s.sbuf.stage(*arrivals)
     s.sbuf.commit()
     if xc.use_resource_opt:
-        kappas = optimize_round_batched(s.rng, s.net, s.sysb, s.n_params,
+        sysb = _gather_sys(s.sysb, cohort) if s.sparse else s.sysb
+        kappas = optimize_round_batched(s.rng, s.net, sysb, s.n_params,
                                         backend=xc.resource_backend).kappa
     else:
-        kappas = np.full(s.U, s.fl.kappa_max)
+        kappas = np.full(s.C, s.fl.kappa_max)
     active = kappas >= 1                    # kappa = 0 => straggler
+    if sel is not None:
+        # only the sampled round-active users train; carried residents idle.
+        # A freshly admitted slot with zero arrivals has nothing to train on.
+        sel_mask = np.zeros(s.C, bool)
+        sel_mask[s.server.pool.user_slot[sel]] = True
+        active = active & sel_mask & (s.sbuf.sizes > 0)
     slots = s.sbuf.sample_slots(s.rng, (s.fl.kappa_max, xc.batch))
     return req_s, kappas, active, slots
 
@@ -411,6 +502,11 @@ def build_fused_engine(alg: str, xc: ExperimentConfig,
             "the fused round draws requests with the stacked Gumbel "
             f"sampler; set request_backend='stacked' "
             f"(got {xc.request_backend!r})")
+    if xc.cohort_size:
+        raise ValueError(
+            "the fused round is dense-only; run cohort_size>0 with "
+            "round_backend='dispatch' (see core/round_fused.py and the "
+            "ROADMAP hierarchical-aggregation follow-up)")
     s = _stacked_setup(alg, xc, eval_samples)
     engine = FusedEngine(
         fl=s.fl, codec=s.codec, model=s.model, consts=s.rstream.consts,
@@ -502,6 +598,13 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     sampler (``data/video_caching_stacked.py``, distribution-equivalent —
     see DESIGN.md "Request model"). Both backends share the same population
     parameters, capacities, arrival process and system params per seed.
+
+    ``xc.cohort_size``/``xc.participation`` switch on the sparse-cohort
+    engine (``core/cohort.py``): only C slots of round state exist, the
+    round-active users are sampled and seated via the slot pool each round,
+    and per-round cost scales with C while ``num_clients`` counts registered
+    users only. ``cohort_size=num_clients`` is bit-exact against the dense
+    path (tests/test_cohort.py); DESIGN.md "Sparse cohorts" has the layout.
     """
     _validate_ckpt_args(save_every_k, checkpoint_dir)
     if xc.round_backend not in ("dispatch", "fused"):
@@ -601,7 +704,10 @@ def run_pod_online_experiment(alg: str, xc: ExperimentConfig,
     mesh; fake a multi-device CPU mesh with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (EXPERIMENTS.md
     "Pod online harness"). ``xc.num_clients`` must be a multiple of the
-    mesh's client rows. Checkpointing mirrors ``run_vectorized_experiment``
+    mesh's client rows — and so must ``xc.cohort_size`` when the sparse
+    slot-pool engine is on (the slot-indexed buffer and the per-user carry
+    tables both shard over the client axes; see ``core/cohort.py``).
+    Checkpointing mirrors ``run_vectorized_experiment``
     (engine tag ``"pod"``; the sharded buffer is host-gathered into the npz
     and re-sharded on resume), and a snapshot additionally refuses to
     resume into a different ``pod_engine`` or mesh layout.
@@ -622,6 +728,11 @@ def run_pod_online_experiment(alg: str, xc: ExperimentConfig,
         raise ValueError(
             f"num_clients {xc.num_clients} is not divisible by the mesh's "
             f"{rows} client rows {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    if xc.cohort_size and xc.cohort_size % rows:
+        raise ValueError(
+            f"cohort_size {xc.cohort_size} is not divisible by the mesh's "
+            f"{rows} client rows (the slot-indexed buffer shards over the "
+            "client axes; each shard must own whole slots)")
     s = _stacked_setup(alg, xc, eval_samples, mesh=mesh,
                        stale_scores=pod_engine == "stale")
     pod_step = _make_pod_step(pod_engine, s, mesh)

@@ -31,12 +31,13 @@ from repro.checkpoint.run_state import (FORMAT_VERSION, CheckpointError,
                                         find_sidecar, generator_state,
                                         load_run_state, meta_path,
                                         parse_sidecar, read_sidecar,
-                                        save_run_state, set_generator_state)
+                                        save_run_state, set_generator_state,
+                                        validate_cohort_shapes)
 
 __all__ = [
     "CheckpointError", "FORMAT_VERSION", "diff_snapshots",
     "generator_state", "load_metadata", "load_run_state", "restore", "save",
-    "save_run_state", "set_generator_state",
+    "save_run_state", "set_generator_state", "validate_cohort_shapes",
 ]
 
 

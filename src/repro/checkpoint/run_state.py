@@ -42,6 +42,34 @@ class CheckpointError(RuntimeError):
     """A checkpoint could not be read/written against the live structures."""
 
 
+def validate_cohort_shapes(sd: dict, num_users: int, capacity: int) -> None:
+    """Validate a slot-pool snapshot against a live run's U and C
+    *independently*.
+
+    The dense engines had slot index == user id, so one fused shape check on
+    the (U, N) buffer covered both dimensions; the sparse-cohort engine
+    (``core/cohort.py``) decouples them — ``user_slot`` is per registered
+    user (length U) while ``slot_user``/the slot-resident state are per pool
+    slot (length C) — and a snapshot from U'=C'=8 must not slip into a U=8,
+    C=4 run (or vice versa) through a single combined check. Each mismatch
+    raises ``CheckpointError`` naming the offending dimension."""
+    missing = sorted(k for k in ("user_slot", "slot_user") if k not in sd)
+    if missing:
+        raise CheckpointError(
+            "cohort snapshot is missing the slot-map keys: "
+            + ", ".join(missing))
+    u = int(np.asarray(sd["user_slot"]).shape[0])
+    c = int(np.asarray(sd["slot_user"]).shape[0])
+    if u != int(num_users):
+        raise CheckpointError(
+            f"cohort snapshot covers U={u} registered users; the live run "
+            f"has U={num_users} (per-user tables cannot be re-indexed)")
+    if c != int(capacity):
+        raise CheckpointError(
+            f"cohort snapshot has slot-pool capacity C={c}; the live run "
+            f"has C={capacity} (slot-resident state cannot be re-packed)")
+
+
 # ---------------------------------------------------------------------------
 # np.random.Generator streams
 # ---------------------------------------------------------------------------

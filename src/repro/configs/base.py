@@ -225,6 +225,19 @@ class FLConfig:
                                       # program, core/round_fused.py; osafl
                                       # + stacked requests only). Applied by
                                       # the cohort harness, recorded here.
+    cohort_size: int = 0              # C: active-slot pool capacity of the
+                                      # sparse-cohort engine (core/cohort.py).
+                                      # 0 = dense (slot index == user id,
+                                      # every registered user materialized);
+                                      # >0 = only C slots are live and
+                                      # per-user score/staleness tables carry
+                                      # the rest. cohort_size=num_clients is
+                                      # the dense-parity anchor. Applied by
+                                      # the cohort harness, recorded here.
+    participation: float = 1.0        # per-round participation fraction of
+                                      # the slot pool (Dinh et al. partial
+                                      # participation; <1 requires
+                                      # cohort_size>0). Harness-applied.
     resource_backend: str = "x64"     # SCA resource solve numerics: x64
                                       # (scoped-f64 parity oracle) | f32
                                       # (log-domain SNR reformulation,

@@ -177,12 +177,7 @@ class _StackedBufferedServer:
         self.codec = make_codec(params)
         self.w = self.codec.flatten(params)
         self.participated = np.zeros(num_clients, bool)
-        if self.buffers_hold_weights:
-            init_row = self.w
-        else:
-            init_row = (self.w / fl.local_lr if fl.literal_init_buffer
-                        else jnp.zeros_like(self.w))
-        self.buffer = jnp.tile(init_row[None, :], (num_clients, 1))
+        self.buffer = jnp.tile(self.init_row()[None, :], (num_clients, 1))
         self.sizes = np.ones(num_clients)        # loop default: size 1
         self.kappas = np.ones(num_clients)
         self.hists = None                        # lazily sized (U, C)
@@ -191,6 +186,17 @@ class _StackedBufferedServer:
     @property
     def params(self):
         return self.codec.unflatten(self.w)
+
+    def init_row(self) -> jnp.ndarray:
+        """The (N,) refresh value of a slot with no live contribution: the
+        current global weights for weight-averaging servers (an averaging
+        no-op), the staleness refresh for gradient-buffer servers. The
+        sparse-cohort engine (``core/cohort.py``) writes this into a slot at
+        admission — eviction drops the slot-resident contribution."""
+        if self.buffers_hold_weights:
+            return self.w
+        return (self.w / self.fl.local_lr if self.fl.literal_init_buffer
+                else jnp.zeros_like(self.w))
 
     def _ingest(self, updates: Sequence[ClientUpdate]):
         d_new, active = scatter_updates(self.codec, updates, self.U)
@@ -210,13 +216,7 @@ class _StackedBufferedServer:
         self.participated |= active
         part = jnp.asarray(self.participated)
         buf = jnp.where(jnp.asarray(active)[:, None], d_new, self.buffer)
-        if self.buffers_hold_weights:
-            refresh = self.w                               # averaging no-op
-        elif self.fl.literal_init_buffer:
-            refresh = self.w / self.fl.local_lr
-        else:
-            refresh = jnp.zeros_like(self.w)
-        self.buffer = jnp.where(part[:, None], buf, refresh[None, :])
+        self.buffer = jnp.where(part[:, None], buf, self.init_row()[None, :])
 
     def _weighted(self, ws) -> jnp.ndarray:
         return jnp.asarray(ws, jnp.float32) @ self.buffer
@@ -352,8 +352,21 @@ SERVERS = {
 }
 
 
-def make_server(params, fl: FLConfig, num_clients: int, seed: int = 0):
+def make_server(params, fl: FLConfig, num_clients: int, seed: int = 0,
+                mesh=None):
     from repro.core.osafl import OSAFLServer, StackedOSAFLServer
+    if fl.cohort_size:
+        # sparse-cohort engine: a width-C stacked server behind an active-slot
+        # pool with per-user carry tables (optionally NamedSharding-split over
+        # the mesh's client axes). Imported lazily — core/cohort.py imports
+        # the stacked servers from this module.
+        from repro.core.cohort import SparseCohortServer
+        if fl.engine != "stacked":
+            raise ValueError(
+                "cohort_size>0 needs the stacked engine (the loop servers "
+                f"are dense per-user oracles; got engine={fl.engine!r})")
+        return SparseCohortServer(params, fl, num_clients, seed=seed,
+                                  mesh=mesh)
     if fl.engine == "stacked":
         if fl.algorithm == "osafl":
             return StackedOSAFLServer(params, fl, num_clients, seed=seed)

@@ -37,9 +37,10 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.core.shmap import client_axes, client_rows, shard_map
+from repro.core.shmap import (client_axes, client_rows, client_sharding,
+                              shard_map)
 
 
 class BufState(NamedTuple):
@@ -121,9 +122,18 @@ class StackedOnlineBuffer:
     @classmethod
     def create(cls, capacities, feature_shape: tuple, num_classes: int,
                stage_capacity: Optional[int] = None, dtype=np.float32,
-               label_dtype=np.int64, mesh=None) -> "StackedOnlineBuffer":
+               label_dtype=np.int64, mesh=None,
+               depth: Optional[int] = None) -> "StackedOnlineBuffer":
+        """``depth`` overrides the allocated storage depth D (default: the
+        max initial capacity). The sparse-cohort harness sizes slot storage
+        to the *population*-wide capacity max so any later-admitted client's
+        D_u fits the row it is reassigned (``reset_rows``)."""
         caps = np.asarray(capacities, np.int32)
-        U, D = caps.shape[0], int(caps.max())
+        U, D = caps.shape[0], int(depth if depth is not None else caps.max())
+        if int(caps.max()) > D:
+            raise ValueError(
+                f"storage depth {D} is smaller than the largest initial "
+                f"capacity {int(caps.max())}")
         S = int(stage_capacity) if stage_capacity else D
         feat = tuple(feature_shape)
         dtype = jax.dtypes.canonicalize_dtype(dtype)
@@ -164,7 +174,7 @@ class StackedOnlineBuffer:
             return P(axes, *([None] * (leaf.ndim - 1)))
 
         shardings = jax.tree.map(
-            lambda leaf: NamedSharding(mesh, spec(leaf)), self.state)
+            lambda leaf: client_sharding(mesh, leaf.ndim), self.state)
         state_specs = jax.tree.map(spec, self.state)
         self.state = jax.device_put(self.state, shardings)
         self.mesh = mesh
@@ -199,6 +209,48 @@ class StackedOnlineBuffer:
         fn = self._commit_fn if self._commit_fn is not None else _commit
         self.state = fn(self.state)
         return n
+
+    # -- slot reassignment (sparse-cohort admissions) ------------------------
+    def reset_rows(self, rows, capacities) -> None:
+        """Reassign storage rows to new clients (slot-pool admission,
+        ``core/cohort.py``): each row's capacity becomes the incoming
+        client's D_u and its FIFO window and staging empty out. The storage
+        tensors are reused in place — the evicted client's samples are dead
+        (size = 0 masks them from the live window, histograms and slot
+        sampling) and are overwritten as the new resident's arrivals land.
+        The shift-proxy memory (``last_hist``) keeps the evicted row until
+        the next ``distribution_shifts`` call; the sparse harness does not
+        consume it."""
+        rows = np.asarray(rows, np.int64).ravel()
+        if rows.size == 0:
+            return
+        caps = np.asarray(capacities, np.int32).ravel()
+        if caps.shape != rows.shape:
+            raise ValueError(
+                f"reset_rows needs one capacity per row (got {rows.size} "
+                f"rows, {caps.size} capacities)")
+        D = int(self.state.y.shape[1])
+        if caps.min(initial=1) < 1 or caps.max(initial=0) > D:
+            raise ValueError(
+                f"reassigned capacities must lie in [1, {D}] (the allocated "
+                f"storage depth); got [{caps.min()}, {caps.max()}]")
+        idx = jnp.asarray(rows)
+        zero = jnp.zeros(rows.size, jnp.int32)
+        st = self.state._replace(
+            cap=self.state.cap.at[idx].set(jnp.asarray(caps)),
+            size=self.state.size.at[idx].set(zero),
+            head=self.state.head.at[idx].set(zero),
+            staged_n=self.state.staged_n.at[idx].set(zero))
+        if self.mesh is not None:
+            # pin the pointer arrays back to their explicit layout — the
+            # out-of-jit scatters above don't owe us sharding preservation
+            st = st._replace(
+                cap=jax.device_put(st.cap, self._shardings.cap),
+                size=jax.device_put(st.size, self._shardings.size),
+                head=jax.device_put(st.head, self._shardings.head),
+                staged_n=jax.device_put(st.staged_n,
+                                        self._shardings.staged_n))
+        self.state = st
 
     # -- views ----------------------------------------------------------------
     @property

@@ -189,9 +189,7 @@ class StackedOSAFLServer:
             np.full(num_clients, 1.0 / num_clients) if alphas is None
             else alphas, jnp.float32)
         self.w = self.codec.flatten(params)
-        init_row = (self.w / fl.local_lr if fl.literal_init_buffer
-                    else jnp.zeros_like(self.w))
-        self.d_buffer = jnp.tile(init_row[None, :], (num_clients, 1))
+        self.d_buffer = jnp.tile(self.init_row()[None, :], (num_clients, 1))
         self.participated = jnp.zeros(num_clients, bool)
         self.last_scores = np.ones(num_clients)
         self._lam_prev = jnp.ones(num_clients, jnp.float32)
@@ -201,6 +199,15 @@ class StackedOSAFLServer:
     @property
     def params(self):
         return self.codec.unflatten(self.w)
+
+    def init_row(self) -> jnp.ndarray:
+        """The (N,) refresh value of a slot holding no live contribution
+        (Algorithm 2 line 17 semantics): w/eta under the literal init, zeros
+        otherwise. The sparse-cohort engine (``core/cohort.py``) writes this
+        into a slot at admission — an evicted client's contribution row is
+        slot-resident and lost, so a readmitted client restarts from it."""
+        return (self.w / self.fl.local_lr if self.fl.literal_init_buffer
+                else jnp.zeros_like(self.w))
 
     def round_stacked(self, d_new: jnp.ndarray, active) -> jnp.ndarray:
         """d_new: (U, N) f32 update matrix; active: (U,) bool mask. Returns

@@ -32,6 +32,13 @@ minibatches from its own buffer shard *inside* the shard_map body
 ``(d, w)`` client contributions; aggregation stays with the stacked servers
 (``benchmarks/common.py::run_pod_online_experiment``), whose dense
 ``(U, N)`` round ops shard over the same client axes under auto-SPMD.
+
+The online steps are indifferent to what the leading client dimension
+indexes: under the sparse-cohort engine (``core/cohort.py``) the storage,
+slots and kappas arriving here are *slot*-indexed arrays of width C (the
+active-slot pool capacity, C % mesh client rows == 0) rather than
+user-indexed arrays of width U — the per-row local-SGD math is identical,
+only the harness's gather/scatter against the per-user tables changes.
 """
 from __future__ import annotations
 

@@ -163,6 +163,13 @@ class FusedEngine:
                 "the fused round draws requests with the stacked Gumbel "
                 "sampler; set request_backend='stacked' "
                 f"(got {fl.request_backend!r})")
+        if fl.cohort_size:
+            raise ValueError(
+                "the fused round is dense-only: its carry bakes slot index "
+                "== user id into one static program, which the sparse "
+                "slot-pool engine (core/cohort.py) breaks by design; run "
+                "cohort_size>0 with round_backend='dispatch' (a slot-"
+                "indexed fused carry is a scoped ROADMAP follow-up)")
         if resource_backend not in RESOURCE_BACKENDS:
             raise ValueError(f"unknown resource backend {resource_backend!r} "
                              f"(expected one of {RESOURCE_BACKENDS})")

@@ -59,3 +59,18 @@ def client_rows(mesh) -> int:
     for a in client_axes(mesh):
         n *= mesh.shape[a]
     return n
+
+
+def client_sharding(mesh, ndim: int = 1):
+    """Explicit ``NamedSharding`` for a ``(U, ...)``-leading cohort array:
+    the leading (client) dimension split over the mesh's client axes, every
+    trailing dimension replicated. One definition shared by the sharded FIFO
+    buffer (``core/buffer_stacked.py``) and the sparse-cohort per-user tables
+    (``core/cohort.py``) so both lay clients out identically."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    axes = client_axes(mesh)
+    if not axes:
+        raise ValueError(
+            f"mesh {mesh} has no client axis (expected 'pod' or 'data' "
+            f"in {mesh.axis_names})")
+    return NamedSharding(mesh, PartitionSpec(axes, *([None] * (ndim - 1))))

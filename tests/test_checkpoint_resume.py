@@ -29,6 +29,7 @@ from repro import checkpoint
 from repro.checkpoint import CheckpointError, diff_snapshots
 from repro.core.buffer import OnlineBuffer
 from repro.core.buffer_stacked import StackedOnlineBuffer
+from repro.core.cohort import SlotPool
 from repro.models.small import init_small
 
 from _hyp import given, settings, st
@@ -45,12 +46,12 @@ def _assert_tree_equal(a, b, skip=("round_s", "request_gen_s")):
 
 
 def _assert_resume_bit_exact(tmp_path, engine, alg, rounds=6,
-                             request_backend="python"):
+                             request_backend="python", mutate=None):
     runner = _RUNNERS[engine]
 
     def cfg(r):
-        return dataclasses.replace(_cfg(r),
-                                   request_backend=request_backend)
+        xc = dataclasses.replace(_cfg(r), request_backend=request_backend)
+        return mutate(xc) if mutate else xc
 
     da, db = tmp_path / "full", tmp_path / "split"
     half = rounds // 2
@@ -69,17 +70,19 @@ def _assert_resume_bit_exact(tmp_path, engine, alg, rounds=6,
     sa = checkpoint.load_run_state(checkpoint_path(da, rounds))
     sb = checkpoint.load_run_state(checkpoint_path(db, rounds))
     # acceptance bar stated explicitly: params and scores at rtol=0 atol=0
-    if "w" in sa["server"]:
-        np.testing.assert_allclose(sb["server"]["w"], sa["server"]["w"],
-                                   rtol=0, atol=0)
+    # (sparse-cohort snapshots keep them one level down, in the width-C
+    # inner server)
+    srv_a = sa["server"].get("inner", sa["server"])
+    srv_b = sb["server"].get("inner", sb["server"])
+    if "w" in srv_a:
+        np.testing.assert_allclose(srv_b["w"], srv_a["w"], rtol=0, atol=0)
     else:
-        for la, lb in zip(jax.tree.leaves(sa["server"]["params"]),
-                          jax.tree.leaves(sb["server"]["params"])):
+        for la, lb in zip(jax.tree.leaves(srv_a["params"]),
+                          jax.tree.leaves(srv_b["params"])):
             np.testing.assert_allclose(lb, la, rtol=0, atol=0)
-    if "last_scores" in sa["server"]:
-        np.testing.assert_allclose(sb["server"]["last_scores"],
-                                   sa["server"]["last_scores"],
-                                   rtol=0, atol=0)
+    if "last_scores" in srv_a:
+        np.testing.assert_allclose(srv_b["last_scores"],
+                                   srv_a["last_scores"], rtol=0, atol=0)
     # ... and then everything — buffers, pointers, staged arrivals, RNG
     # stream positions, staleness flags, metric history — bit-exact
     _assert_tree_equal(sa, sb)
@@ -100,6 +103,61 @@ def test_resume_determinism_stacked_request_backend(tmp_path):
     and resumes bit-exactly too."""
     _assert_resume_bit_exact(tmp_path, "stacked", "osafl",
                              request_backend="stacked")
+
+
+def _sparse(xc):
+    """C < U with participation sampling on a 16-user pool — admissions,
+    FIFO evictions and buffer resets all land inside the saved window."""
+    return dataclasses.replace(xc, num_clients=16, cohort_size=4,
+                               participation=0.75)
+
+
+@pytest.mark.parametrize("alg,backend", [("osafl", "python"),
+                                         ("osafl", "stacked"),
+                                         ("fednova", "python")])
+def test_resume_determinism_sparse_cohort(tmp_path, alg, backend):
+    """The sparse-cohort engine resumes bit-exactly through churn: the
+    snapshot carries the slot map (user<->slot + FIFO clocks), the width-C
+    inner server, the per-user tables and the cohort-sampling RNG position
+    — and the restored run replays the identical admission/eviction
+    sequence."""
+    _assert_resume_bit_exact(tmp_path, "stacked", alg,
+                             request_backend=backend, mutate=_sparse)
+
+
+def test_sparse_snapshot_has_no_dense_ghost(tmp_path):
+    """A C < U snapshot stores slot-resident state at width C and carries
+    at width U — never a dense (U, N) contribution buffer."""
+    xc = _sparse(_cfg(2, num_clients=16))
+    run_vectorized_experiment("osafl", xc, eval_samples=16,
+                              save_every_k=2, checkpoint_dir=tmp_path)
+    sv = checkpoint.load_run_state(checkpoint_path(tmp_path, 2))["server"]
+    assert sorted(sv) == ["inner", "pool", "tables"]
+    assert sv["inner"]["d_buffer"].shape[0] == 4
+    assert sv["pool"]["user_slot"].shape == (16,)
+    assert sv["tables"]["scores"].shape == (16,)
+
+
+def test_resume_rejects_mismatched_cohort_shape(tmp_path):
+    """cohort_size/participation are part of the run shape: a sparse
+    snapshot refuses both a dense resume and a different pool capacity."""
+    xc = _sparse(_cfg(2, num_clients=16))
+    run_vectorized_experiment("osafl", xc, eval_samples=16,
+                              save_every_k=2, checkpoint_dir=tmp_path)
+    ck = checkpoint_path(tmp_path, 2)
+    with pytest.raises(CheckpointError, match="cohort_size"):
+        run_vectorized_experiment(
+            "osafl", dataclasses.replace(xc, cohort_size=8),
+            eval_samples=16, resume_from=ck)
+    with pytest.raises(CheckpointError, match="participation"):
+        run_vectorized_experiment(
+            "osafl", dataclasses.replace(xc, participation=1.0),
+            eval_samples=16, resume_from=ck)
+    with pytest.raises(CheckpointError, match="cohort_size"):
+        run_vectorized_experiment(
+            "osafl",
+            dataclasses.replace(xc, cohort_size=0, participation=1.0),
+            eval_samples=16, resume_from=ck)
 
 
 @pytest.mark.slow
@@ -221,6 +279,29 @@ def test_buffer_snapshot_roundtrip_arbitrary_states(cap0, cap1, bursts,
         assert np.array_equal(ox, r2x) and np.array_equal(oy, r2y)
         assert oracles[u].size == oracles2[u].size == sbuf2.sizes[u]
         assert oracles[u].head == oracles2[u].head == sbuf2.heads[u]
+
+
+def test_slot_pool_runstate_roundtrip_half_full(tmp_path):
+    """A half-full slot pool (free slots, an eviction hole, live FIFO
+    clocks) survives the npz RunState round-trip bit-exactly and the
+    restored pool continues identically to the original."""
+    pool = SlotPool(10, 4)
+    pool.admit([7, 2, 5])
+    pool.evict([2])                       # a freed hole mid-pool
+    assert pool.occupancy == 2 < pool.C
+    checkpoint.save_run_state(tmp_path / "s", {"pool": pool.state_dict()})
+    loaded = checkpoint.load_run_state(tmp_path / "s")["pool"]
+    clone = SlotPool(10, 4)
+    clone.load_state_dict(loaded)
+    for k, v in clone.state_dict().items():
+        np.testing.assert_array_equal(v, pool.state_dict()[k])
+    # identical continuations: refill past capacity on both copies
+    for p in (pool, clone):
+        res = p.admit([1, 2, 3, 4])       # forces FIFO evictions, in
+        assert res.evicted.tolist() == [7, 5]   # seating order
+        p.check()
+    np.testing.assert_array_equal(clone.user_slot, pool.user_slot)
+    np.testing.assert_array_equal(clone.slot_user, pool.slot_user)
 
 
 # ---------------------------------------------------------------------------

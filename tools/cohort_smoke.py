@@ -1,0 +1,92 @@
+"""CI sparse-cohort smoke: 3 online rounds at U = 4096 with C = 64 slots.
+
+Runs the sparse slot-pool engine (``core/cohort.py``) through the
+vectorized online harness at a population the dense engines cannot
+materialize in CI time: 4096 registered users, a 64-slot active pool,
+participation sampling at 0.5 (so every round admits a fresh cohort,
+FIFO-evicts stale residents and resets the recycled buffer rows). Fails
+(exit 1) on a non-finite loss, on a round whose participant count exceeds
+the participation budget, on a dense ``(U, N)`` ghost in the RunState
+snapshot, or on an untouched-user violation — a carry can only change
+while its user is seated, so the set of users whose (U,) table rows moved
+must stay within the admission budget (> 95% of the population bit-
+untouched). Also prints per-round wall-clock so regressions are visible in
+the CI log (the >= 5x sparse-vs-dense ratio is gated separately by
+``benchmarks/bench_online.py --smoke``).
+
+Usage: PYTHONPATH=src python tools/cohort_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import (ExperimentConfig,  # noqa: E402
+                               checkpoint_path,
+                               run_vectorized_experiment)
+from repro import checkpoint  # noqa: E402
+
+U, C, ROUNDS, PARTICIPATION = 4096, 64, 3, 0.5
+
+
+def main() -> int:
+    xc = ExperimentConfig(model="mlp", dataset=2, num_clients=U,
+                          rounds=ROUNDS, capacity=(12, 24), arrivals=4,
+                          batch=8, seed=5, request_backend="stacked",
+                          cohort_size=C, participation=PARTICIPATION)
+    with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as td:
+        hist = run_vectorized_experiment("osafl", xc, eval_samples=64,
+                                         save_every_k=ROUNDS,
+                                         checkpoint_dir=td)
+        sv = checkpoint.load_run_state(checkpoint_path(td, ROUNDS))["server"]
+    budget = max(1, int(round(PARTICIPATION * C)))
+    bad = []
+    # no dense ghost in the snapshot; untouched users carry initial state
+    if sv["inner"]["d_buffer"].shape[0] != C:
+        bad.append(f"slot buffer is {sv['inner']['d_buffer'].shape[0]} "
+                   f"rows wide, expected C={C}")
+    # a user's carry can only change while seated in a slot (trained, or
+    # score-refreshed as a resident), so the touched set is bounded by the
+    # initial fill plus the per-round admission budget — at U=4096 that
+    # leaves > 95% of the population bit-untouched
+    part = np.asarray(sv["tables"]["participated"], bool)
+    scores = np.asarray(sv["tables"]["scores"])
+    touched = int((part | (scores != 1.0)).sum())
+    if touched > C + ROUNDS * budget:
+        bad.append(f"{touched} users' carries were touched; at most "
+                   f"{C + ROUNDS * budget} were ever admitted")
+    for h in hist:
+        print(f"round={h['round']} test_loss={h['test_loss']:.4f} "
+              f"participants={h['participants']} "
+              f"round_s={h['round_s']:.2f}")
+        if not np.isfinite(h["test_loss"]):
+            bad.append(f"round {h['round']}: non-finite loss")
+        if h["participants"] > budget:
+            bad.append(f"round {h['round']}: {h['participants']} "
+                       f"participants > budget {budget}")
+    if len(hist) != ROUNDS:
+        bad.append(f"history has {len(hist)} rounds, expected {ROUNDS}")
+    for msg in bad:
+        print("FAIL:", msg)
+    if bad:
+        print("cohort smoke FAILED")
+        return 1
+    print(json.dumps({"U": U, "C": C, "rounds": ROUNDS,
+                      "round_s": [h["round_s"] for h in hist],
+                      "final_loss": hist[-1]["test_loss"]}, default=float))
+    print(f"cohort smoke OK: U={U} population on a C={C} slot pool, "
+          f"participants <= {budget} every round, losses finite")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
