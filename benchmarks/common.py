@@ -30,9 +30,11 @@ from repro.core.shmap import client_rows
 from repro.data.online import (binomial_arrivals_batched, dataset_layout,
                                draw_arrival_batch, load_streams_state,
                                pad_arrival_batch, streams_state_dict)
+from repro.core.cohort import sample_participants
 from repro.data.video_caching import make_population
 from repro.data.video_caching_stacked import StackedRequestStream
 from repro.models.small import REGISTRY, init_small, small_loss
+from repro.scenarios import parse_scenario
 
 MODEL_PARAMS = {"fcn": 3_900_000, "cnn": 1_100_000, "squeezenet": 740_000,
                 "lstm": 430_000, "mlp": 18_000}
@@ -152,6 +154,30 @@ class ExperimentConfig:
                                       # <1 needs cohort_size>0)
     cell_radius_m: float = 600.0      # milder than Fig.3's 1 km so the
                                       # reduced-round runs see participants
+    scenario: str = ""                # wireless-world scenario spec
+                                      # (src/repro/scenarios/): "" = none,
+                                      # "null" = empty scenario through the
+                                      # hook plumbing (bit-exact vs ""),
+                                      # else "+"-composed named
+                                      # perturbations seeded by xc.seed.
+                                      # Stacked harnesses only; the fused
+                                      # round and the loop oracle accept
+                                      # only ""/"null".
+
+
+def _scenario_or_raise(xc: "ExperimentConfig", harness: str):
+    """Parse ``xc.scenario`` for a harness that cannot apply perturbations
+    (loop oracle, centralized genie, fused round): ""/"null" pass through
+    (the null scenario perturbs nothing by construction), anything else is
+    rejected up front."""
+    scn = parse_scenario(xc.scenario, seed=xc.seed)
+    if scn is not None and not scn.is_null:
+        raise ValueError(
+            f"{harness} does not apply scenario perturbations (got "
+            f"scenario={xc.scenario!r}); run scenarios on "
+            "run_vectorized_experiment or run_pod_online_experiment with "
+            "round_backend='dispatch'")
+    return scn
 
 
 def _draw(stream, n, dataset):
@@ -185,6 +211,7 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400,
             "run_experiment is the dense per-client oracle; the sparse "
             "slot-pool engine (cohort_size/participation) needs "
             "run_vectorized_experiment or run_pod_online_experiment")
+    _scenario_or_raise(xc, "run_experiment (the loop oracle)")
     model = xc.model
     cat, streams = make_population(xc.seed, xc.num_clients, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)
@@ -299,6 +326,13 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
             "participation sampling needs the slot-pool engine: set "
             "cohort_size (cohort_size=num_clients keeps every user "
             "resident and only samples the round-active subset)")
+    # scenario layer: pure seeded perturbation schedule (hooks fire only when
+    # a perturbation applies, so ""/"null" keep the historical code path —
+    # the null-parity anchor, tests/test_scenarios.py)
+    scn = parse_scenario(xc.scenario, seed=xc.seed)
+    if scn is not None:
+        scn.bind(U)
+    arr_width = scn.arrival_width(xc.arrivals) if scn else xc.arrivals
     cat, streams = make_population(xc.seed, U, topk=xc.topk)
     rstream = (StackedRequestStream.from_streams(cat, streams, seed=xc.seed)
                if stacked_req else None)
@@ -306,6 +340,8 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
     feat_shape, dtype = dataset_layout(xc.dataset)
     lo, hi = xc.capacity
     caps = rng.integers(lo, max(hi, lo + 1), size=U)
+    if scn is not None:
+        caps = scn.setup_capacities(caps)
     server_fl = FLConfig(num_clients=U, local_lr=xc.local_lr,
                          global_lr=(xc.global_lr
                                     if alg in ("osafl", "afa_cd") else 1.0),
@@ -315,6 +351,7 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
                          resource_backend=xc.resource_backend,
                          cohort_size=xc.cohort_size,
                          participation=xc.participation,
+                         scenario=xc.scenario,
                          stale_scores=stale_scores)
     server = make_server(init_small(jax.random.PRNGKey(xc.seed), xc.model),
                          server_fl, U, seed=xc.seed,
@@ -326,7 +363,7 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
     cohort0 = server.cohort if sparse else np.arange(U)
     sbuf = StackedOnlineBuffer.create(
         caps[cohort0] if sparse else caps, feat_shape, 100,
-        stage_capacity=xc.arrivals, dtype=dtype, mesh=mesh,
+        stage_capacity=arr_width, dtype=dtype, mesh=mesh,
         # slot storage must fit any later-admitted resident's capacity
         depth=int(caps.max()) if sparse else None)
     # initial fill (residents only): FIFO commits compose, so ingest the
@@ -368,11 +405,14 @@ def _stacked_setup(alg: str, xc: ExperimentConfig, eval_samples: int,
     net = NetworkConfig()
     sysb = stack_clients(make_clients(rng, U,
                                       cell_radius_m=xc.cell_radius_m))
+    if scn is not None:
+        sysb = scn.setup_system(sysb)
     n_params = MODEL_PARAMS.get(model, 1_000_000)
     return SimpleNamespace(
         stacked_req=stacked_req, model=model, U=U, streams=streams,
         rstream=rstream, rng=rng, caps=caps, sbuf=sbuf, p_ac=p_ac,
         test_batch=test_batch, grad_fn=grad_fn, fl=fl, server=server,
+        scn=scn, arr_width=arr_width,
         codec=server.codec,
         weights_alg=alg in ("fedavg", "fedprox", "feddisco"),
         prox_mu=fl.fedprox_mu if alg == "fedprox" else 0.0,
@@ -404,7 +444,8 @@ def _gather_sys(sysb, rows):
                  for f in dataclasses.fields(sysb)})
 
 
-def _draw_round_inputs(s: SimpleNamespace, xc: ExperimentConfig) -> tuple:
+def _draw_round_inputs(s: SimpleNamespace, xc: ExperimentConfig,
+                       t: int) -> tuple:
     """One round of host-side draws, in the canonical order: (sparse only)
     the round-active cohort sample + slot-pool admissions, then arrival
     counts + samples (staged and committed FIFO), the resource-optimizer
@@ -413,12 +454,26 @@ def _draw_round_inputs(s: SimpleNamespace, xc: ExperimentConfig) -> tuple:
     the dense path is the C = U identity). At cohort_size=num_clients with
     full participation the sparse branch consumes the host RNG in exactly
     the dense order (identity gathers, no cohort sample), which is what
-    makes the parity anchor bit-exact."""
+    makes the parity anchor bit-exact.
+
+    The scenario layer (``s.scn``, src/repro/scenarios/) perturbs this
+    round's inputs at four points — the participation sample (availability
+    masks + selection weights), the arrival process (E_u / p_ac), the
+    resource-config rows, and the final active mask. Scenario draws come
+    from the scenario's own pure (seed, round)-keyed streams, never
+    ``s.rng``, and each hook leaves its input untouched when it does not
+    fire — so a null scenario consumes the host RNG in exactly the
+    unscenarioed order (bit-exact, tests/test_scenarios.py)."""
     t0 = time.perf_counter()
+    scn = s.scn
+    avail = scn.round_available(t, s.U) if scn is not None else None
     sel = None
     if s.sparse:
         if s.resample:
-            sel = np.sort(s.rng.choice(s.U, size=s.m_active, replace=False))
+            weights = (scn.round_selection_weights(t, s.U)
+                       if scn is not None else None)
+            sel = sample_participants(s.rng, s.U, s.m_active,
+                                      weights=weights, available=avail)
             res = s.server.admit(sel)
             if res.newly.any():
                 # a reassigned slot loses the evicted resident's dataset:
@@ -429,33 +484,45 @@ def _draw_round_inputs(s: SimpleNamespace, xc: ExperimentConfig) -> tuple:
         p_ac = s.p_ac[cohort]
     else:
         cohort, p_ac = None, s.p_ac
-    counts = binomial_arrivals_batched(s.rng, xc.arrivals, p_ac)
+    e_u = xc.arrivals
+    if scn is not None:
+        e_u, p_ac = scn.round_arrivals(t, e_u, p_ac)
+    if avail is not None:
+        # departed users generate no arrivals this round
+        p_ac = p_ac * (avail[cohort] if s.sparse else avail)
+    counts = binomial_arrivals_batched(s.rng, e_u, p_ac)
     if s.stacked_req:
         if s.sparse:
             # the stacked stream state stays (U,)-wide; non-residents draw
             # a zero count so their streams do not advance
             full = np.zeros(s.U, counts.dtype)
             full[cohort] = counts
-            xs, ys, cnt = s.rstream.draw(full, xc.dataset, xc.arrivals)
+            xs, ys, cnt = s.rstream.draw(full, xc.dataset, s.arr_width)
             arrivals = (xs[cohort], ys[cohort], cnt[cohort])
         else:
-            arrivals = s.rstream.draw(counts, xc.dataset, xc.arrivals)
+            arrivals = s.rstream.draw(counts, xc.dataset, s.arr_width)
         jax.block_until_ready(arrivals[1])   # honest request_gen_s
     else:
         streams = ([s.streams[u] for u in cohort] if s.sparse
                    else s.streams)
         arrivals = draw_arrival_batch(streams, counts, xc.dataset,
-                                      width=xc.arrivals)
+                                      width=s.arr_width)
     req_s = time.perf_counter() - t0
     s.sbuf.stage(*arrivals)
     s.sbuf.commit()
     if xc.use_resource_opt:
-        sysb = _gather_sys(s.sysb, cohort) if s.sparse else s.sysb
+        sysb = s.sysb
+        if scn is not None:
+            sysb = scn.round_system(t, sysb)
+        sysb = _gather_sys(sysb, cohort) if s.sparse else sysb
         kappas = optimize_round_batched(s.rng, s.net, sysb, s.n_params,
                                         backend=xc.resource_backend).kappa
     else:
         kappas = np.full(s.C, s.fl.kappa_max)
     active = kappas >= 1                    # kappa = 0 => straggler
+    if avail is not None:
+        # departed users do not report an update either
+        active = active & (avail[cohort] if s.sparse else avail)
     if sel is not None:
         # only the sampled round-active users train; carried residents idle.
         # A freshly admitted slot with zero arrivals has nothing to train on.
@@ -507,6 +574,7 @@ def build_fused_engine(alg: str, xc: ExperimentConfig,
             "the fused round is dense-only; run cohort_size>0 with "
             "round_backend='dispatch' (see core/round_fused.py and the "
             "ROADMAP hierarchical-aggregation follow-up)")
+    _scenario_or_raise(xc, "the fused round")
     s = _stacked_setup(alg, xc, eval_samples)
     engine = FusedEngine(
         fl=s.fl, codec=s.codec, model=s.model, consts=s.rstream.consts,
@@ -624,7 +692,7 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
         history, start_round = _resume_stacked(s, snap)
     for t in range(start_round, xc.rounds):
         t_start = time.perf_counter()
-        req_s, kappas, active, slots = _draw_round_inputs(s, xc)
+        req_s, kappas, active, slots = _draw_round_inputs(s, xc, t)
         d, w = local_step(s.server.params, s.sbuf.gather(slots),
                           jnp.asarray(kappas))
         upd = s.codec.flatten_stacked(w if s.weights_alg else d)
@@ -747,7 +815,7 @@ def run_pod_online_experiment(alg: str, xc: ExperimentConfig,
         history, start_round = _resume_stacked(s, snap)
     for t in range(start_round, xc.rounds):
         t_start = time.perf_counter()
-        req_s, kappas, active, slots = _draw_round_inputs(s, xc)
+        req_s, kappas, active, slots = _draw_round_inputs(s, xc, t)
         d, w = pod_step(s.server.params, s.sbuf.state.x, s.sbuf.state.y,
                         jnp.asarray(slots), jnp.asarray(kappas))
         upd = s.codec.flatten_stacked(w if s.weights_alg else d)
@@ -784,6 +852,7 @@ def run_centralized_sgd(xc: ExperimentConfig, eval_samples: int = 400):
             "run_centralized_sgd draws from the per-client oracle streams "
             f"and only supports request_backend='python' "
             f"(got {xc.request_backend!r})")
+    _scenario_or_raise(xc, "run_centralized_sgd (the genie baseline)")
     model = xc.model
     cat, streams = make_population(xc.seed, xc.num_clients, topk=xc.topk)
     rng = np.random.default_rng(xc.seed)

@@ -1,0 +1,172 @@
+"""Reproduced-curve JSON artifacts (library — not a benchmark entry point).
+
+Every ported figure/table script (`fig1`/`fig2`/`fig3`/`table2`/`table4`)
+records its reproduced trajectories as one curve document: a plain-JSON dict
+with a pinned ``schema`` tag, the run configuration, a list of named curves
+(per-round metric series of equal length), and a flat scalar ``summary``
+(the table cells / single-number figure metrics). The documents are fully
+deterministic in the run seed — no timestamps, no wall-clock fields — so
+``tests/golden/`` can pin them and ``tools/gen_golden.py`` can regenerate
+them byte-comparably.
+
+Layout (``SCHEMA = "osafl-curves/v1"``)::
+
+    {"schema": "osafl-curves/v1",
+     "name": "fig1_static_vs_timevarying",
+     "preset": "smoke",
+     "config": {...},                      # plain-JSON run shape
+     "curves": [
+        {"name": "timevarying", "algorithm": "osafl", "scenario": "",
+         "round": [0, 1, ...], "test_loss": [...], "test_acc": [...],
+         "participants": [...]},
+        ...],
+     "summary": {"fig1_timevarying_final_acc": 0.61, ...}}
+
+``validate_doc`` is the well-formedness contract the CLI tests assert on
+(`tests/test_benchmarks_cli.py`): schema tag, curve-key completeness,
+equal series lengths, and finite metric values.
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+SCHEMA = "osafl-curves/v1"
+
+# every curve carries these series, all of equal length
+_SERIES = ("round", "test_loss", "test_acc", "participants")
+_INT_SERIES = ("round", "participants")
+
+
+def curve_from_history(name: str, history, algorithm: str = "",
+                       scenario: str = "") -> dict:
+    """One named curve from a harness history (list of per-round dicts).
+    Wall-clock fields (``round_s``, ``request_gen_s``) are dropped — curve
+    docs are deterministic in the seed."""
+    return {
+        "name": str(name),
+        "algorithm": str(algorithm),
+        "scenario": str(scenario),
+        "round": [int(h["round"]) for h in history],
+        "test_loss": [float(h["test_loss"]) for h in history],
+        "test_acc": [float(h["test_acc"]) for h in history],
+        "participants": [int(h.get("participants", 0)) for h in history],
+    }
+
+
+def series_curve(name: str, series: dict, algorithm: str = "",
+                 scenario: str = "") -> dict:
+    """A curve from raw per-round series (for scripts whose metric is not a
+    harness history — fig2's drift shares, fig3's straggler fractions).
+    ``series`` maps a subset of {test_loss, test_acc, participants} plus any
+    extra float series; ``round`` is derived from the longest series."""
+    n = max(len(v) for v in series.values())
+    curve = {"name": str(name), "algorithm": str(algorithm),
+             "scenario": str(scenario), "round": list(range(n))}
+    for k in ("test_loss", "test_acc"):
+        curve[k] = [float(v) for v in series.get(k, [0.0] * n)]
+    curve["participants"] = [int(v)
+                             for v in series.get("participants", [0] * n)]
+    for k, v in series.items():
+        if k not in _SERIES:
+            curve[k] = [float(x) for x in v]
+    return curve
+
+
+def make_doc(name: str, preset: str, config: dict, curves: list,
+             summary: dict) -> dict:
+    # round-trip config through JSON so an in-memory doc compares equal to
+    # its loaded pin (tuples -> lists, numpy scalars -> python numbers)
+    doc = {"schema": SCHEMA, "name": str(name), "preset": str(preset),
+           "config": json.loads(json.dumps(dict(config), default=float)),
+           "curves": list(curves),
+           "summary": {k: float(v) for k, v in summary.items()}}
+    validate_doc(doc)
+    return doc
+
+
+def validate_doc(doc: dict) -> dict:
+    """Raise ValueError unless ``doc`` is a well-formed curve document;
+    returns the doc. This is the contract the CLI subprocess tests and the
+    golden layer assert on."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"curve doc must be a dict, got {type(doc)}")
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"bad schema tag {doc.get('schema')!r} "
+                         f"(expected {SCHEMA!r})")
+    for key in ("name", "preset", "config", "curves", "summary"):
+        if key not in doc:
+            raise ValueError(f"curve doc missing key {key!r}")
+    if not isinstance(doc["curves"], list) or not doc["curves"]:
+        raise ValueError("curve doc needs a non-empty 'curves' list")
+    for c in doc["curves"]:
+        for key in ("name", "algorithm", "scenario") + _SERIES:
+            if key not in c:
+                raise ValueError(
+                    f"curve {c.get('name', '?')!r} missing key {key!r}")
+        lengths = {k: len(c[k]) for k in c
+                   if isinstance(c[k], list)}
+        if len(set(lengths.values())) != 1:
+            raise ValueError(
+                f"curve {c['name']!r} has unequal series lengths {lengths}")
+        for k, v in c.items():
+            if not isinstance(v, list):
+                continue
+            if any(isinstance(x, float) and not math.isfinite(x)
+                   for x in v):
+                raise ValueError(
+                    f"curve {c['name']!r} series {k!r} has non-finite values")
+    for k, v in doc["summary"].items():
+        if not math.isfinite(float(v)):
+            raise ValueError(f"summary metric {k!r} is non-finite ({v})")
+    return doc
+
+
+def write_doc(path, doc: dict) -> None:
+    validate_doc(doc)
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+
+
+def load_doc(path) -> dict:
+    return validate_doc(json.loads(Path(path).read_text()))
+
+
+def summary_rows(doc: dict) -> list:
+    """The legacy ``(key, value)`` CSV rows every script's ``__main__``
+    prints, derived from the doc's summary (sorted for determinism)."""
+    return sorted(doc["summary"].items())
+
+
+def add_cli_args(parser, presets=("smoke", "paper")) -> None:
+    """The shared figure/table CLI surface: ``--preset``, ``--out``,
+    ``--scenario`` (an overlay composed onto whatever scenario the script
+    itself uses), ``--seed``."""
+    parser.add_argument("--preset", choices=presets, default="smoke",
+                        help="run shape: smoke (seconds, CI scale) or paper "
+                             "(EXPERIMENTS.md paper-scale recipe)")
+    parser.add_argument("--out", default=None, metavar="PATH",
+                        help="write the reproduced-curve JSON document here")
+    parser.add_argument("--scenario", default="",
+                        help="scenario overlay spec, composed (+) onto each "
+                             "run's own scenario (src/repro/scenarios/)")
+    parser.add_argument("--seed", type=int, default=0)
+
+
+def compose_specs(*specs: str) -> str:
+    """Compose scenario spec strings with ``+``, dropping empties; "null"
+    terms are absorbed (null is the identity of composition)."""
+    terms = [s for s in specs if s and s != "null"]
+    if not terms:
+        return "null" if any(s == "null" for s in specs) else ""
+    return "+".join(terms)
+
+
+def finish(doc: dict, out) -> dict:
+    """Common ``run()`` tail: validate, optionally write, return the doc."""
+    validate_doc(doc)
+    if out:
+        write_doc(out, doc)
+    return doc

@@ -1,8 +1,14 @@
-"""Paper Fig. 1: centralized mini-batch SGD with a static dataset vs a
-time-varying (FIFO, online-arrival) dataset. Reduced scale: video-caching
-Dataset-1 stands in for CIFAR-10 (offline container; same mechanism)."""
+"""Paper Fig. 1: learning on a static dataset vs a time-varying (FIFO,
+online-arrival) dataset. Reproduced on the stacked engine as a scenario
+pair: the time-varying world is the harness's native online setting; the
+static world is the same run under ``quiet(scale=0.0)`` — the scenario
+layer damps every arrival probability to zero, so the FIFO buffers freeze
+at their initial fill (src/repro/scenarios/). Reduced scale by default:
+video-caching Dataset-2 stands in for CIFAR-10 (same mechanism);
+``--preset paper`` runs the EXPERIMENTS.md paper-scale shape."""
 from __future__ import annotations
 
+import dataclasses
 import sys
 import time
 from pathlib import Path
@@ -13,41 +19,60 @@ if __package__ in (None, ""):    # executed as a script: python benchmarks/...
         if _p not in sys.path:
             sys.path.insert(0, _p)
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import ExperimentConfig, run_centralized_sgd
-from repro.core.buffer import OnlineBuffer
-from repro.data.video_caching import D1_DIM, make_population
-from repro.models.small import init_small, small_loss
+from benchmarks import curves
+from benchmarks.common import ExperimentConfig, run_vectorized_experiment
+
+PRESETS = {
+    # CI scale: seconds on a 2-core CPU
+    "smoke": dict(model="mlp", dataset=2, num_clients=6, rounds=8,
+                  arrivals=8, batch=4, capacity=(16, 24)),
+    # EXPERIMENTS.md paper-scale recipe (Dataset-2 / U=256 / T=100)
+    "paper": dict(model="mlp", dataset=2, num_clients=256, rounds=100,
+                  arrivals=8, capacity=(320, 640),
+                  request_backend="stacked"),
+}
 
 
-def run(rounds=15, seed=0):
+def run(preset="smoke", seed=0, scenario="", out=None):
     t0 = time.time()
-    # time-varying: arrivals + FIFO
-    xc = ExperimentConfig(model="fcn", rounds=rounds, num_clients=6,
-                          seed=seed)
-    tv = run_centralized_sgd(xc)
-    # static: no arrivals
-    xc2 = ExperimentConfig(model="fcn", rounds=rounds, num_clients=6,
-                           arrivals=0, seed=seed)
-    st = run_centralized_sgd(xc2)
+    base = ExperimentConfig(seed=seed, **PRESETS[preset])
+    # time-varying: the native online world (plus any CLI overlay)
+    xc_tv = dataclasses.replace(
+        base, scenario=curves.compose_specs(scenario))
+    tv = run_vectorized_experiment("osafl", xc_tv)
+    # static: freeze the datasets through the scenario layer
+    xc_st = dataclasses.replace(
+        base, scenario=curves.compose_specs("quiet(scale=0.0)", scenario))
+    st = run_vectorized_experiment("osafl", xc_st)
     tv_acc = [h["test_acc"] for h in tv]
     st_acc = [h["test_acc"] for h in st]
     # instability metric: std of round-to-round accuracy deltas
-    tv_var = float(np.std(np.diff(tv_acc)))
-    st_var = float(np.std(np.diff(st_acc)))
-    rows = [("fig1_static_final_acc", st_acc[-1]),
-            ("fig1_timevarying_final_acc", tv_acc[-1]),
-            ("fig1_static_instability", st_var),
-            ("fig1_timevarying_instability", tv_var)]
-    return rows, time.time() - t0
+    summary = {
+        "fig1_static_final_acc": st_acc[-1],
+        "fig1_timevarying_final_acc": tv_acc[-1],
+        "fig1_static_instability": float(np.std(np.diff(st_acc))),
+        "fig1_timevarying_instability": float(np.std(np.diff(tv_acc))),
+    }
+    doc = curves.make_doc(
+        "fig1_static_vs_timevarying", preset,
+        dict(PRESETS[preset], seed=seed, scenario=scenario),
+        [curves.curve_from_history("timevarying", tv, algorithm="osafl",
+                                   scenario=xc_tv.scenario),
+         curves.curve_from_history("static", st, algorithm="osafl",
+                                   scenario=xc_st.scenario)],
+        summary)
+    curves.finish(doc, out)
+    return curves.summary_rows(doc), time.time() - t0, doc
 
 
 if __name__ == "__main__":
     import argparse
-    argparse.ArgumentParser(description=__doc__.splitlines()[0]).parse_args()
-    rows, dt = run()
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    curves.add_cli_args(p)
+    a = p.parse_args()
+    rows, dt, _ = run(preset=a.preset, seed=a.seed, scenario=a.scenario,
+                      out=a.out)
     for k, v in rows:
         print(f"{k},{dt * 1e6:.0f},{v:.4f}")

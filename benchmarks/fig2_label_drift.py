@@ -1,5 +1,11 @@
 """Paper Fig. 2: per-user label-distribution drift across training rounds
-(share of the initially top-2 and least-2 files in the FIFO buffer)."""
+(share of the initially top-2 and least-2 files in the FIFO buffer).
+Reproduced on the stacked data layer: the whole cohort's FIFO buffers and
+request streams advance as one batched op per round
+(``StackedOnlineBuffer`` + ``StackedRequestStream``), with the arrival
+process routed through the scenario layer — the baseline drift curve runs
+the native Binomial arrivals, and a ``flash_crowd`` curve shows how request
+spikes accelerate the drift (src/repro/scenarios/)."""
 from __future__ import annotations
 
 import sys
@@ -14,40 +20,97 @@ if __package__ in (None, ""):    # executed as a script: python benchmarks/...
 
 import numpy as np
 
-from repro.core.buffer import OnlineBuffer
-from repro.data.video_caching import D1_DIM, make_population
+from benchmarks import curves
+from repro.core.buffer_stacked import StackedOnlineBuffer
+from repro.data.online import binomial_arrivals_batched, dataset_layout
+from repro.data.video_caching import make_population
+from repro.data.video_caching_stacked import StackedRequestStream
+from repro.scenarios import parse_scenario
+
+PRESETS = {
+    "smoke": dict(num_users=4, rounds=12, capacity=100, arrivals=12),
+    # paper-scale cohort width (EXPERIMENTS.md): U=256 users drifting at once
+    "paper": dict(num_users=256, rounds=100, capacity=320, arrivals=12),
+}
 
 
-def run(rounds=12, seed=0):
-    t0 = time.time()
-    cat, streams = make_population(seed, 1)
-    s = streams[0]
-    buf = OnlineBuffer.create(100, (D1_DIM,), 100)
-    x, y = s.draw_dataset1(100)
-    buf.stage(x, y)
+def _drift_curve(preset_cfg, seed, spec):
+    """Mean top-2/least-2 shares over users, per round, under ``spec``."""
+    U, rounds = preset_cfg["num_users"], preset_cfg["rounds"]
+    cap, arrivals = preset_cfg["capacity"], preset_cfg["arrivals"]
+    cat, streams = make_population(seed, U)
+    rstream = StackedRequestStream.from_streams(cat, streams, seed=seed)
+    scn = parse_scenario(spec, seed=seed)
+    if scn is not None:
+        scn.bind(U)
+    width = scn.arrival_width(arrivals) if scn else arrivals
+    feat_shape, dtype = dataset_layout(1)
+    buf = StackedOnlineBuffer.create(np.full(U, cap), feat_shape, 100,
+                                     stage_capacity=max(width, cap),
+                                     dtype=dtype)
+    xs, ys, cnt = rstream.draw(np.full(U, cap), 1, cap)
+    buf.stage(xs, ys, cnt)
     buf.commit()
-    h0 = buf.label_histogram()
-    top2 = np.argsort(-h0)[:2]
-    least2 = [f for f in np.argsort(h0) if h0[f] > 0][:2]
-    drift_top, drift_least, shifts = [], [], []
+    h0 = buf.label_histograms()                     # (U, L)
+    top2 = np.argsort(-h0, axis=1)[:, :2]
+    # least-2 present files per user (mask absent files out of the argsort)
+    least = np.where(h0 > 0, h0, np.inf)
+    least2 = np.argsort(least, axis=1)[:, :2]
+    rowsel = np.arange(U)[:, None]
+    p_ac = np.array([s.user.p_ac for s in streams])
+    buf.distribution_shifts()                       # arm the shift baseline
+    top_share, least_share, shifts = [], [], []
     for t in range(rounds):
-        x, y = s.draw_dataset1(12)
-        buf.stage(x, y)
+        e_u, p = arrivals, p_ac
+        if scn is not None:
+            e_u, p = scn.round_arrivals(t, e_u, p)
+        counts = binomial_arrivals_batched(
+            np.random.default_rng([seed, t]), e_u, p)
+        xs, ys, cnt = rstream.draw(counts, 1, width)
+        buf.stage(xs, ys, cnt)
         buf.commit()
-        h = buf.label_histogram()
-        drift_top.append(float(h[top2].sum()))
-        drift_least.append(float(h[least2].sum()))
-        shifts.append(buf.distribution_shift())
-    rows = [("fig2_top2_share_initial", float(h0[top2].sum())),
-            ("fig2_top2_share_final", drift_top[-1]),
-            ("fig2_least2_share_final", drift_least[-1]),
-            ("fig2_mean_round_shift", float(np.mean(shifts[1:])))]
-    return rows, time.time() - t0
+        h = buf.label_histograms()
+        top_share.append(float(h[rowsel, top2].sum(axis=1).mean()))
+        least_share.append(float(h[rowsel, least2].sum(axis=1).mean()))
+        shifts.append(float(buf.distribution_shifts().mean()))
+    series = {"top2_share": top_share, "least2_share": least_share,
+              "dist_shift": shifts}
+    h0_top = float(h0[rowsel, top2].sum(axis=1).mean())
+    return series, h0_top
+
+
+def run(preset="smoke", seed=0, scenario="", out=None):
+    t0 = time.time()
+    cfg = PRESETS[preset]
+    base_spec = curves.compose_specs(scenario)
+    spike_spec = curves.compose_specs("flash_crowd(period=4,duty=1,scale=3)",
+                                      scenario)
+    base, h0_top = _drift_curve(cfg, seed, base_spec)
+    spike, _ = _drift_curve(cfg, seed, spike_spec)
+    summary = {
+        "fig2_top2_share_initial": h0_top,
+        "fig2_top2_share_final": base["top2_share"][-1],
+        "fig2_least2_share_final": base["least2_share"][-1],
+        "fig2_mean_round_shift": float(np.mean(base["dist_shift"][1:])),
+        "fig2_flashcrowd_mean_round_shift":
+            float(np.mean(spike["dist_shift"][1:])),
+    }
+    doc = curves.make_doc(
+        "fig2_label_drift", preset, dict(cfg, seed=seed, scenario=scenario),
+        [curves.series_curve("drift", base, scenario=base_spec),
+         curves.series_curve("drift_flash_crowd", spike,
+                             scenario=spike_spec)],
+        summary)
+    curves.finish(doc, out)
+    return curves.summary_rows(doc), time.time() - t0, doc
 
 
 if __name__ == "__main__":
     import argparse
-    argparse.ArgumentParser(description=__doc__.splitlines()[0]).parse_args()
-    rows, dt = run()
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    curves.add_cli_args(p)
+    a = p.parse_args()
+    rows, dt, _ = run(preset=a.preset, seed=a.seed, scenario=a.scenario,
+                      out=a.out)
     for k, v in rows:
         print(f"{k},{dt * 1e6:.0f},{v:.4f}")

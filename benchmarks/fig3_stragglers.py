@@ -1,5 +1,10 @@
 """Paper Fig. 3: model payload vs stragglers — the fraction of clients for
-which the resource problem (5) is infeasible, per model, over rounds."""
+which the resource problem (5) is infeasible, per model, over rounds.
+Reproduced on the stacked resource path: the whole cohort's kappa/f/p
+solves run as one ``optimize_round_batched`` call per round, and the
+paper's 1 km straggler regime is expressed through the scenario layer —
+a ``radius_step`` perturbation steps every client's distance mid-run
+(src/repro/scenarios/), producing a second per-model curve."""
 from __future__ import annotations
 
 import sys
@@ -14,35 +19,76 @@ if __package__ in (None, ""):    # executed as a script: python benchmarks/...
 
 import numpy as np
 
+from benchmarks import curves
 from benchmarks.common import MODEL_PARAMS
-from repro.core.resource import NetworkConfig, make_clients, optimize_round
+from repro.core.resource import NetworkConfig, make_clients
+from repro.core.resource_stacked import optimize_round_batched, stack_clients
+from repro.scenarios import parse_scenario
+
+PRESETS = {
+    "smoke": dict(num_clients=40, rounds=10),
+    # paper-scale cohort width (EXPERIMENTS.md): U=256 solved jointly
+    "paper": dict(num_clients=256, rounds=40),
+}
+
+# 600 m default cell -> the paper's 1 km regime, stepped at mid-run
+_STEP = "radius_step(at={at},factor=1.667)"
 
 
-def run(num_clients=40, rounds=10, seed=0):
+def _straggler_curve(rng, net, sysb, n_params, rounds, scn):
+    """Per-round infeasible fraction + per-client infeasibility counts."""
+    U = len(sysb.f_max)
+    fracs, per_client = [], np.zeros(U)
+    for t in range(rounds):
+        sb = scn.round_system(t, sysb) if scn is not None else sysb
+        kappas = optimize_round_batched(rng, net, sb, n_params).kappa
+        infeas = kappas < 1
+        fracs.append(float(infeas.mean()))
+        per_client += infeas
+    return fracs, per_client
+
+
+def run(preset="smoke", seed=0, scenario="", out=None):
     t0 = time.time()
+    cfg = PRESETS[preset]
+    num_clients, rounds = cfg["num_clients"], cfg["rounds"]
+    step_spec = curves.compose_specs(_STEP.format(at=rounds // 2), scenario)
+    base_spec = curves.compose_specs(scenario)
     rng = np.random.default_rng(seed)
     net = NetworkConfig()
-    clients = make_clients(rng, num_clients)
-    rows = []
+    sysb = stack_clients(make_clients(rng, num_clients))
+    curve_list, summary = [], {}
     for model, n_params in sorted(MODEL_PARAMS.items(),
                                   key=lambda kv: -kv[1]):
-        fracs = []
-        per_client = np.zeros(num_clients)
-        for t in range(rounds):
-            dec = optimize_round(rng, net, clients, n_params)
-            infeas = np.array([not d.feasible for d in dec])
-            fracs.append(infeas.mean())
-            per_client += infeas
-        # paper metric: clients that are stragglers in >= 50% of rounds
-        ge50 = float(np.mean(per_client / rounds >= 0.5))
-        rows.append((f"fig3_{model}_straggler_frac", float(np.mean(fracs))))
-        rows.append((f"fig3_{model}_ge50pct_rounds", ge50))
-    return rows, time.time() - t0
+        for label, spec in (("", base_spec), ("_1km_step", step_spec)):
+            scn = parse_scenario(spec, seed=seed)
+            if scn is not None:
+                scn.bind(num_clients)
+            sb = scn.setup_system(sysb) if scn is not None else sysb
+            fracs, per_client = _straggler_curve(
+                np.random.default_rng([seed, n_params]), net, sb, n_params,
+                rounds, scn)
+            curve_list.append(curves.series_curve(
+                f"{model}{label}", {"straggler_frac": fracs}, scenario=spec))
+            summary[f"fig3_{model}{label}_straggler_frac"] = \
+                float(np.mean(fracs))
+            if not label:
+                # paper metric: clients infeasible in >= 50% of rounds
+                summary[f"fig3_{model}_ge50pct_rounds"] = \
+                    float(np.mean(per_client / rounds >= 0.5))
+    doc = curves.make_doc(
+        "fig3_stragglers", preset, dict(cfg, seed=seed, scenario=scenario),
+        curve_list, summary)
+    curves.finish(doc, out)
+    return curves.summary_rows(doc), time.time() - t0, doc
 
 
 if __name__ == "__main__":
     import argparse
-    argparse.ArgumentParser(description=__doc__.splitlines()[0]).parse_args()
-    rows, dt = run()
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    curves.add_cli_args(p)
+    a = p.parse_args()
+    rows, dt, _ = run(preset=a.preset, seed=a.seed, scenario=a.scenario,
+                      out=a.out)
     for k, v in rows:
         print(f"{k},{dt * 1e6:.0f},{v:.4f}")

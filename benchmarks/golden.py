@@ -1,0 +1,83 @@
+"""Golden-curve run registry (library — not a benchmark entry point).
+
+``GOLDEN_RUNS`` names every pinned reproduction: one smoke-preset,
+seed-0 run per ported figure/table script. ``tools/gen_golden.py``
+regenerates the pinned documents under ``tests/golden/`` and
+``tests/test_scenarios_golden.py`` re-runs each definition and compares
+against the pin with tolerances (float series loosely, integer series —
+rounds, participants — exactly). Regenerate after any intentional
+trajectory change:
+
+    PYTHONPATH=src:. python tools/gen_golden.py            # all
+    PYTHONPATH=src:. python tools/gen_golden.py fig1 fig3  # a subset
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):    # imported by path from tools/gen_golden.py
+    _ROOT = Path(__file__).resolve().parent.parent
+    for _p in (str(_ROOT / "src"), str(_ROOT)):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+GOLDEN_DIR = Path(__file__).resolve().parent.parent / "tests" / "golden"
+
+# heavy runs (LSTM / full-algorithm sweeps, ~1 min each) carry the ``slow``
+# pytest marker in tests/test_scenarios_golden.py; the rest run in tier 1
+SLOW = ("table2", "table4")
+
+
+def _fig1():
+    from benchmarks import fig1_static_vs_timevarying
+    return fig1_static_vs_timevarying.run(preset="smoke", seed=0)[2]
+
+
+def _fig2():
+    from benchmarks import fig2_label_drift
+    return fig2_label_drift.run(preset="smoke", seed=0)[2]
+
+
+def _fig3():
+    from benchmarks import fig3_stragglers
+    return fig3_stragglers.run(preset="smoke", seed=0)[2]
+
+
+def _table2():
+    from benchmarks import table2_dataset1
+    return table2_dataset1.run(preset="smoke", seed=0)[2]
+
+
+def _table4():
+    from benchmarks import table4_dataset2
+    return table4_dataset2.run(preset="smoke", seed=0)[2]
+
+
+GOLDEN_RUNS = {
+    "fig1": _fig1,
+    "fig2": _fig2,
+    "fig3": _fig3,
+    "table2": _table2,
+    "table4": _table4,
+}
+
+
+def golden_path(name: str) -> Path:
+    return GOLDEN_DIR / f"{name}_smoke.json"
+
+
+def generate(names=None, out_dir: Path = None) -> list:
+    """Regenerate the pinned docs; returns the written paths."""
+    from benchmarks import curves
+    out_dir = Path(out_dir) if out_dir else GOLDEN_DIR
+    written = []
+    for name in names or sorted(GOLDEN_RUNS):
+        if name not in GOLDEN_RUNS:
+            raise SystemExit(f"unknown golden run {name!r} "
+                             f"(expected one of {sorted(GOLDEN_RUNS)})")
+        doc = GOLDEN_RUNS[name]()
+        path = out_dir / f"{name}_smoke.json"
+        curves.write_doc(path, doc)
+        written.append(path)
+    return written

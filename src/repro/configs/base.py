@@ -238,6 +238,17 @@ class FLConfig:
                                       # the slot pool (Dinh et al. partial
                                       # participation; <1 requires
                                       # cohort_size>0). Harness-applied.
+    scenario: str = ""                # composable wireless-world scenario
+                                      # spec (src/repro/scenarios/): ""
+                                      # = none (the historical code path),
+                                      # "null" = empty scenario routed
+                                      # through the hook plumbing (bit-exact
+                                      # vs ""), else "+"-composed named
+                                      # perturbations, e.g.
+                                      # "churn(p_away=0.3)+flash_crowd()".
+                                      # Applied at the harness hook points
+                                      # (benchmarks/common.py), recorded
+                                      # here; servers never consult it.
     resource_backend: str = "x64"     # SCA resource solve numerics: x64
                                       # (scoped-f64 parity oracle) | f32
                                       # (log-domain SNR reformulation,

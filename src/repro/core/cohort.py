@@ -54,6 +54,41 @@ from repro.core.osafl import StackedOSAFLServer
 from repro.core.shmap import client_rows, client_sharding
 
 
+def sample_participants(rng: np.random.Generator, num_users: int, m: int,
+                        weights: Optional[np.ndarray] = None,
+                        available: Optional[np.ndarray] = None) -> np.ndarray:
+    """Sample the round-active participant set (sorted user ids).
+
+    With neither ``weights`` nor ``available`` this is exactly
+    ``np.sort(rng.choice(U, size=m, replace=False))`` — the historical
+    host-RNG consumption the dense-parity and null-scenario anchors rest on.
+    The scenario layer biases it: ``weights`` (U,) are relative sampling
+    weights (Pareto-biased selection), ``available`` (U,) masks departed
+    users out entirely (churn); when fewer than ``m`` users remain the
+    sample shrinks to the available count (possibly empty — a round where
+    everyone is away trains nobody)."""
+    if weights is None and available is None:
+        return np.sort(rng.choice(num_users, size=m, replace=False))
+    w = (np.ones(num_users, np.float64) if weights is None
+         else np.asarray(weights, np.float64).copy())
+    if w.shape != (num_users,):
+        raise ValueError(
+            f"selection weights must have shape ({num_users},), "
+            f"got {w.shape}")
+    if (w < 0).any():
+        # a negative weight would silently renormalize into a *valid*
+        # probability against a negative sum — reject it loudly
+        raise ValueError("selection weights must be non-negative")
+    if available is not None:
+        w[~np.asarray(available, bool)] = 0.0
+    eligible = int(np.count_nonzero(w))
+    m = min(int(m), eligible)
+    if m == 0:
+        return np.empty(0, np.int64)
+    return np.sort(rng.choice(num_users, size=m, replace=False,
+                              p=w / w.sum()))
+
+
 class AdmitResult(NamedTuple):
     """Outcome of ``SlotPool.admit``: per requested user its slot, whether
     the user was newly seated this call (slot state must be initialized),

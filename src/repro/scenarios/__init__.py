@@ -1,0 +1,12 @@
+"""Composable wireless-world scenario layer (DESIGN.md "Scenario layer").
+
+``parse_scenario(spec, seed)`` turns a ``+``-composed spec string (e.g.
+``"churn(p_away=0.3)+flash_crowd(scale=3)"``) into a ``Scenario`` whose pure,
+seeded per-round hooks the online harnesses apply; ``REGISTRY`` maps the
+named perturbations. See ``scenarios/base.py`` for the hook/purity contract
+and ``scenarios/library.py`` for the named perturbations.
+"""
+from repro.scenarios.base import Perturbation, Scenario, parse_scenario
+from repro.scenarios.library import REGISTRY
+
+__all__ = ["Perturbation", "Scenario", "parse_scenario", "REGISTRY"]

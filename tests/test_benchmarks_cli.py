@@ -19,19 +19,31 @@ import pytest
 
 ROOT = Path(__file__).resolve().parent.parent
 
+# libraries, not entry points: shared harness (common), the curve-JSON
+# schema (curves), and the golden-run registry (golden)
+_LIBS = {"common.py", "curves.py", "golden.py"}
+
 ENTRY_POINTS = sorted(
     p.relative_to(ROOT) for p in (ROOT / "benchmarks").glob("*.py")
-    if p.name != "common.py")
+    if p.name not in _LIBS)
+
+# the ported figure/table reproductions: executed end-to-end at smoke scale
+# below, each must write a well-formed curve JSON document
+CURVE_SCRIPTS = ("fig1_static_vs_timevarying.py", "fig2_label_drift.py",
+                 "fig3_stragglers.py", "table2_dataset1.py",
+                 "table4_dataset2.py")
 
 
 def test_all_entry_points_enumerated():
-    # every benchmarks/*.py except the common library is an entry point; a
+    # every benchmarks/*.py except the library modules is an entry point; a
     # new script missing its __main__ block would silently drop out of the
     # CLI sweep below, so pin the count
     assert len(ENTRY_POINTS) == 11
     for p in ENTRY_POINTS:
         text = (ROOT / p).read_text()
         assert "__main__" in text, f"{p} has no __main__ block"
+    for lib in _LIBS:
+        assert (ROOT / "benchmarks" / lib).exists(), lib
 
 
 def test_benchmark_cli_help_from_repo_root():
@@ -50,6 +62,44 @@ def test_benchmark_cli_help_from_repo_root():
             failures.append(f"{p}: rc={proc.returncode}\n{err}")
         elif "usage:" not in out.lower():
             failures.append(f"{p}: no usage text in --help output:\n{out}")
+    assert not failures, "\n---\n".join(failures)
+
+
+def test_curve_scripts_execute_and_write_wellformed_json(tmp_path):
+    """Every ported figure/table script runs end-to-end at smoke scale as a
+    plain subprocess from the repo root and writes a curve document that
+    passes the schema contract (``benchmarks.curves.validate_doc``: pinned
+    schema tag, complete curve keys, equal series lengths, finite metrics)
+    and prints the legacy ``key,us,value`` CSV rows. Spawned concurrently —
+    the two algorithm-sweep tables dominate the wall clock."""
+    from benchmarks import curves
+
+    env = {k: v for k, v in os.environ.items() if k != "PYTHONPATH"}
+    env["JAX_PLATFORMS"] = "cpu"
+    procs = []
+    for name in CURVE_SCRIPTS:
+        out = tmp_path / f"{Path(name).stem}.json"
+        procs.append((name, out, subprocess.Popen(
+            [sys.executable, str(Path("benchmarks") / name),
+             "--preset", "smoke", "--out", str(out)],
+            cwd=ROOT, env=env, stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE, text=True)))
+    failures = []
+    for name, out, proc in procs:
+        stdout, stderr = proc.communicate(timeout=540)
+        if proc.returncode != 0:
+            failures.append(f"{name}: rc={proc.returncode}\n{stderr}")
+            continue
+        rows = [ln for ln in stdout.strip().splitlines() if "," in ln]
+        if not rows or any(len(ln.split(",")) != 3 for ln in rows):
+            failures.append(f"{name}: malformed CSV rows:\n{stdout}")
+        try:
+            doc = curves.load_doc(out)
+        except Exception as e:                    # missing file or bad doc
+            failures.append(f"{name}: bad curve doc: {e}")
+            continue
+        if doc["preset"] != "smoke" or not doc["curves"]:
+            failures.append(f"{name}: unexpected doc shape")
     assert not failures, "\n---\n".join(failures)
 
 

@@ -41,7 +41,8 @@ from benchmarks.common import (ALL_ALGS, ExperimentConfig, build_fused_engine,
 from repro.checkpoint import CheckpointError, validate_cohort_shapes
 from repro.configs.base import FLConfig
 from repro.core.baselines import make_server
-from repro.core.cohort import SlotPool, SparseCohortServer
+from repro.core.cohort import (SlotPool, SparseCohortServer,
+                               sample_participants)
 from repro.core.osafl import StackedOSAFLServer
 
 from _hyp import given, settings, st
@@ -462,3 +463,112 @@ def test_sparse_pod_run_on_8_device_mesh():
     assert res["mesh_refused"], res
     assert res["divisible_ok"], res
     assert res["dloss"] <= 1e-5, res
+
+
+# ---------------------------------------------------------------------------
+# scenario-churn sequences: participation sampling, clocks, carried state
+# ---------------------------------------------------------------------------
+
+def test_sample_participants_contract():
+    """The no-bias path is byte-for-byte the historical draw (the null-
+    scenario anchor); availability masks exclude users entirely; an
+    all-away round trains nobody; malformed weights are rejected."""
+    plain = sample_participants(np.random.default_rng(9), 10, 4)
+    hist = np.sort(np.random.default_rng(9).choice(10, size=4,
+                                                   replace=False))
+    np.testing.assert_array_equal(plain, hist)
+    avail = np.zeros(10, bool)
+    avail[[2, 5]] = True
+    sel = sample_participants(np.random.default_rng(0), 10, 4,
+                              available=avail)
+    assert set(sel.tolist()) == {2, 5}            # shrinks to the eligible
+    assert sample_participants(np.random.default_rng(0), 10, 3,
+                               available=np.zeros(10, bool)).size == 0
+    w = np.zeros(10)
+    w[7] = 3.0
+    np.testing.assert_array_equal(
+        sample_participants(np.random.default_rng(0), 10, 2, weights=w),
+        [7])
+    with pytest.raises(ValueError, match="shape"):
+        sample_participants(np.random.default_rng(0), 10, 2,
+                            weights=np.ones(4))
+    with pytest.raises(ValueError, match="non-negative"):
+        sample_participants(np.random.default_rng(0), 10, 2,
+                            weights=-np.ones(10))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 8), st.integers(0, 10 ** 6),
+       st.integers(3, 10))
+def test_slot_pool_churn_sequences_bijection_and_clock_monotonic(
+        C, extra, seed, rounds):
+    """Scenario-style churn: each round an availability mask departs a
+    random subset and Pareto weights bias the participation sample; the
+    sampled users are admitted under slot pressure. Through arbitrary
+    depart/rejoin interleavings the user<->slot maps stay a bijection,
+    departed users are never seated, and the FIFO clocks advance strictly
+    monotonically (every newly seated slot's admit tick exceeds every tick
+    issued before it)."""
+    U = C + extra
+    rng = np.random.default_rng(seed)
+    pool = SlotPool(U, C)
+    weights = rng.pareto(1.5, U) + 1.0
+    last_tick = int(pool.state_dict()["clock"]) - 1
+    for t in range(rounds):
+        avail = rng.random(U) >= 0.4
+        m = int(rng.integers(1, C + 1))
+        sel = sample_participants(rng, U, m, weights=weights,
+                                  available=avail)
+        assert avail[sel].all()                   # departed never sampled
+        res = pool.admit(sel)
+        pool.check()
+        ticks = np.sort(pool.admit_seq[res.slots[res.newly]])
+        assert (ticks > last_tick).all(), "admit clock went backwards"
+        if ticks.size:
+            last_tick = int(ticks[-1])
+        resident = np.flatnonzero(pool.user_slot >= 0)
+        assert np.isin(sel, resident).all()       # the whole sample seated
+        assert resident.size <= C
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=10))
+def test_scores_and_staleness_carry_across_churn(seq):
+    """Arbitrary depart/rejoin (eviction pressure) sequences on the sparse
+    OSAFL server: a user's score / stale-score carry / participation flag
+    ride back in on readmission exactly as last written, and users sitting
+    out keep their table rows untouched — only the slot-resident
+    contribution row is lost on eviction (the documented semantics)."""
+    srv = _sparse_server("osafl", U=6, C=2, seed=1)
+    rng = np.random.default_rng(7)
+    N = int(srv.w.shape[0])
+    expected = {u: (1.0, 1.0, False) for u in range(6)}
+    for u in seq:
+        res = srv.admit([u])
+        s = int(res.slots[0])
+        if res.newly[0]:
+            # carried per-user state was gathered into the slot...
+            assert float(np.asarray(srv.inner.last_scores)[s]) == \
+                expected[u][0]
+            assert float(np.asarray(srv.inner._lam_prev)[s]) == \
+                expected[u][1]
+            assert bool(np.asarray(srv.inner.participated)[s]) == \
+                expected[u][2]
+            # ...and the contribution row was reset to the refresh value
+            np.testing.assert_array_equal(
+                np.asarray(srv.inner.d_buffer[s]),
+                np.asarray(srv.inner.init_row()))
+        cohort = srv.cohort
+        live = cohort >= 0
+        d = jnp.asarray(rng.normal(size=(2, N)).astype(np.float32))
+        srv.round_stacked(d, jnp.asarray(live))
+        scores = np.asarray(srv.tables["scores"])
+        lam = np.asarray(srv.tables["lam_prev"])
+        part = np.asarray(srv.tables["participated"])
+        for uu in cohort[live].tolist():
+            expected[uu] = (float(scores[uu]), float(lam[uu]),
+                            bool(part[uu]))
+        # everyone else's table rows are exactly their carried values
+        for uu in set(range(6)) - set(cohort[live].tolist()):
+            assert (float(scores[uu]), float(lam[uu]),
+                    bool(part[uu])) == expected[uu], f"user {uu} drifted"

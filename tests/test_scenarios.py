@@ -1,0 +1,220 @@
+"""Scenario layer (src/repro/scenarios/): spec parsing and composition
+semantics, hook purity, the null-scenario bit-exactness guarantee on every
+engine, and the pairwise composition matrix on both the dense-stacked and
+sparse-cohort paths (the ISSUE acceptance surface).
+
+The null-parity tests are the load-bearing ones: a scenario hook that
+touches the host RNG, resizes a draw, or perturbs an input when it should
+not fire shows up here as a bitwise trajectory divergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from benchmarks.common import (ExperimentConfig, run_centralized_sgd,
+                               run_experiment, run_pod_online_experiment,
+                               run_vectorized_experiment)
+from repro.core.resource_stacked import stack_clients
+from repro.core.resource import make_clients
+from repro.scenarios import REGISTRY, Scenario, parse_scenario
+
+METRICS = ("round", "test_loss", "test_acc", "participants")
+
+
+def _xc(**kw) -> ExperimentConfig:
+    base = dict(model="mlp", dataset=2, num_clients=6, rounds=3,
+                capacity=(12, 24), arrivals=4, batch=8, seed=7)
+    base.update(kw)
+    return ExperimentConfig(**base)
+
+
+def _key(history):
+    return [tuple(h[k] for k in METRICS) for h in history]
+
+
+# ---------------------------------------------------------------------------
+# parsing and composition semantics
+# ---------------------------------------------------------------------------
+
+def test_parse_scenario_basics():
+    assert parse_scenario("", seed=0) is None
+    assert parse_scenario(None, seed=0) is None
+    null = parse_scenario("null", seed=0)
+    assert isinstance(null, Scenario) and null.is_null
+    scn = parse_scenario("churn(p_away=0.4)+flash_crowd(scale=2)", seed=1)
+    assert [p.name for p in scn.perturbations] == ["churn", "flash_crowd"]
+    assert not scn.is_null
+    assert scn.arrival_width(8) == 16
+
+
+def test_parse_scenario_rejects_malformed_specs():
+    for bad in ("nope()", "churn(p_away=2.0)", "null+churn()",
+                "churn(bogus_kw=1)", "churn(p_away=)", "churn)("):
+        with pytest.raises(ValueError):
+            parse_scenario(bad, seed=0)
+
+
+def test_registry_covers_the_named_perturbations():
+    assert {"churn", "flash_crowd", "quiet", "radius_step",
+            "device_classes", "pareto_select"} <= set(REGISTRY)
+
+
+def test_bind_is_idempotent_and_guards_rebind():
+    scn = parse_scenario("churn()", seed=0)
+    scn.bind(8)
+    scn.bind(8)                                   # idempotent
+    with pytest.raises(ValueError):
+        scn.bind(16)
+
+
+def test_hooks_are_pure_in_seed_and_round():
+    """The same (spec, seed) replayed gives identical draws round by round
+    — the property resume and the golden pins rest on."""
+    a = parse_scenario("churn(p_away=0.5)+pareto_select()", seed=3)
+    b = parse_scenario("churn(p_away=0.5)+pareto_select()", seed=3)
+    a.bind(12), b.bind(12)
+    for t in (0, 1, 5, 99):
+        np.testing.assert_array_equal(a.round_available(t, 12),
+                                      b.round_available(t, 12))
+        np.testing.assert_array_equal(a.round_selection_weights(t, 12),
+                                      b.round_selection_weights(t, 12))
+    c = parse_scenario("churn(p_away=0.5)+pareto_select()", seed=4)
+    c.bind(12)
+    assert any(not np.array_equal(a.round_available(t, 12),
+                                  c.round_available(t, 12))
+               for t in range(12))                # a different world
+
+
+def test_composition_masks_and_weights_combine():
+    """Availability masks AND together; selection weights multiply;
+    arrival transforms chain in spec order."""
+    scn = parse_scenario("churn(p_away=1.0,period=2,away=1)"
+                         "+churn(p_away=1.0,period=3,away=1)", seed=5)
+    scn.bind(8)
+    one = parse_scenario("churn(p_away=1.0,period=2,away=1)", seed=5)
+    one.bind(8)
+    for t in range(6):
+        both = scn.round_available(t, 8)
+        first = one.round_available(t, 8)
+        assert (both <= first).all()              # AND can only remove
+    w2 = parse_scenario("pareto_select()+pareto_select(alpha=3.0)", seed=5)
+    w2.bind(8)
+    w = w2.round_selection_weights(0, 8)
+    assert w.shape == (8,) and (w > 0).all()
+    chain = parse_scenario("flash_crowd(period=1,duty=1,scale=2)"
+                           "+quiet(scale=0.5)", seed=0)
+    chain.bind(4)
+    e_u, p_ac = chain.round_arrivals(0, 6, np.full(4, 0.8))
+    assert int(e_u) == 12                         # flash_crowd doubled E_u
+    np.testing.assert_allclose(p_ac, 0.4)         # quiet halved p_ac
+    assert chain.arrival_width(6) == 12
+
+
+def test_null_scenario_hooks_return_inputs_untouched():
+    scn = parse_scenario("null", seed=0)
+    scn.bind(4)
+    p = np.array([0.5, 0.5, 0.5, 0.5])
+    e_u, p_ac = scn.round_arrivals(0, 8, p)
+    assert e_u == 8 and p_ac is p                 # same objects, no copy
+    assert scn.round_available(0, 4) is None
+    assert scn.round_selection_weights(0, 4) is None
+    sysb = stack_clients(make_clients(np.random.default_rng(0), 4))
+    assert scn.round_system(0, sysb) is sysb
+    assert scn.arrival_width(8) == 8
+
+
+def test_perturbation_parameter_validation():
+    for bad in ("churn(p_away=-0.1)", "churn(period=1)",
+                "flash_crowd(scale=0)", "flash_crowd(duty=9,period=4)",
+                "quiet(scale=1.5)", "radius_step(at=-1)",
+                "radius_step(factor=0.0)", "device_classes(f=0.0)",
+                "device_classes(weak_frac=2)", "pareto_select(alpha=0)"):
+        with pytest.raises(ValueError):
+            parse_scenario(bad, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# the null-scenario anchor: bit-exact on every engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,overrides", [
+    ("vectorized", {}),
+    ("stacked_requests", dict(request_backend="stacked")),
+    ("fused", dict(request_backend="stacked", round_backend="fused")),
+    ("cohort", dict(cohort_size=4, participation=0.75)),
+])
+def test_null_scenario_bit_exact(name, overrides):
+    base = run_vectorized_experiment("osafl", _xc(**overrides),
+                                     eval_samples=32)
+    null = run_vectorized_experiment(
+        "osafl", _xc(scenario="null", **overrides), eval_samples=32)
+    assert _key(base) == _key(null), f"{name}: null scenario diverged"
+
+
+def test_null_scenario_bit_exact_pod():
+    base = run_pod_online_experiment("osafl", _xc(), eval_samples=32)
+    null = run_pod_online_experiment("osafl", _xc(scenario="null"),
+                                     eval_samples=32)
+    assert _key(base) == _key(null)
+
+
+def test_non_null_scenario_rejected_off_the_stacked_paths():
+    with pytest.raises(ValueError, match="scenario"):
+        run_experiment("osafl", _xc(scenario="churn()"), eval_samples=16)
+    with pytest.raises(ValueError, match="scenario"):
+        run_centralized_sgd(_xc(scenario="churn()"), eval_samples=16)
+    with pytest.raises(ValueError, match="scenario"):
+        run_vectorized_experiment(
+            "osafl", _xc(scenario="churn()", request_backend="stacked",
+                         round_backend="fused"), eval_samples=16)
+    # ""/"null" pass through everywhere
+    assert run_experiment("osafl", _xc(scenario="null", rounds=1),
+                          eval_samples=16)
+
+
+# ---------------------------------------------------------------------------
+# pairwise composition on the dense-stacked and sparse-cohort paths
+# ---------------------------------------------------------------------------
+
+# one representative spec per named perturbation, tuned to actually fire
+# within the 2-round matrix runs
+SPECS = {
+    "churn": "churn(p_away=0.5,period=2,away=1)",
+    "flash_crowd": "flash_crowd(period=2,duty=1,scale=2)",
+    "quiet": "quiet(scale=0.5)",
+    "radius_step": "radius_step(at=1,factor=1.667)",
+    "device_classes": "device_classes(weak_frac=0.5)",
+    "pareto_select": "pareto_select()",
+}
+
+PAIRS = sorted(itertools.combinations(sorted(SPECS), 2))
+
+
+@pytest.mark.parametrize("a,b", PAIRS)
+def test_pairwise_compositions_run_on_both_paths(a, b):
+    spec = f"{SPECS[a]}+{SPECS[b]}"
+    for overrides in ({}, dict(cohort_size=4, participation=0.75)):
+        hist = run_vectorized_experiment(
+            "osafl", _xc(rounds=2, scenario=spec, **overrides),
+            eval_samples=16)
+        assert [h["round"] for h in hist] == [0, 1], (spec, overrides)
+        assert all(np.isfinite(h["test_loss"]) for h in hist), \
+            (spec, overrides)
+        assert all(0 <= h["participants"] <= 6 for h in hist)
+
+
+def test_scenario_perturbs_the_trajectory():
+    """A firing scenario must actually change the run (guards against
+    hooks that parse but never apply)."""
+    base = run_vectorized_experiment("osafl", _xc(), eval_samples=32)
+    churned = run_vectorized_experiment(
+        "osafl", _xc(scenario="churn(p_away=1.0,period=2,away=1)"),
+        eval_samples=32)
+    assert _key(base) != _key(churned)
+    parts = [h["participants"] for h in churned]
+    assert min(parts) < min(h["participants"] for h in base) or \
+        parts != [h["participants"] for h in base]

@@ -1,0 +1,63 @@
+"""Golden-curve regression: every ported figure/table reproduction re-runs
+at smoke scale and must match its pinned document in ``tests/golden/``.
+
+Integer series (rounds, participants) must match exactly — they encode the
+RNG consumption order and the straggler/participation masks, the things a
+harness regression silently changes. Float series and summary metrics
+compare under tolerance (same-platform runs are bit-identical; the slack
+absorbs BLAS/codegen drift across CI image updates without letting a real
+trajectory change through). Heavy runs (``benchmarks.golden.SLOW``) carry
+the ``slow`` marker and run in the scheduled/CI lanes only.
+
+Regenerate pins after an intentional change:
+``PYTHONPATH=src:. python tools/gen_golden.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from benchmarks import curves
+from benchmarks.golden import GOLDEN_RUNS, SLOW, golden_path
+
+RTOL, ATOL = 1e-2, 5e-3
+
+_params = [pytest.param(name, marks=pytest.mark.slow)
+           if name in SLOW else name for name in sorted(GOLDEN_RUNS)]
+
+
+def test_all_runs_pinned():
+    missing = [n for n in GOLDEN_RUNS if not golden_path(n).exists()]
+    assert not missing, (
+        f"golden pins missing for {missing}; run tools/gen_golden.py")
+
+
+@pytest.mark.parametrize("name", _params)
+def test_golden_curves(name):
+    pinned = curves.load_doc(golden_path(name))
+    doc = curves.validate_doc(GOLDEN_RUNS[name]())
+    assert doc["name"] == pinned["name"]
+    assert doc["preset"] == pinned["preset"]
+    assert doc["config"] == pinned["config"]
+    got = {c["name"]: c for c in doc["curves"]}
+    want = {c["name"]: c for c in pinned["curves"]}
+    assert sorted(got) == sorted(want), "curve set changed"
+    for cname, w in want.items():
+        g = got[cname]
+        assert g["algorithm"] == w["algorithm"]
+        assert g["scenario"] == w["scenario"]
+        assert sorted(g) == sorted(w), f"{cname}: series set changed"
+        for k in w:
+            if not isinstance(w[k], list):
+                continue
+            if all(isinstance(x, int) for x in w[k]):
+                assert g[k] == w[k], f"{cname}.{k} (exact series) diverged"
+            else:
+                np.testing.assert_allclose(
+                    g[k], w[k], rtol=RTOL, atol=ATOL,
+                    err_msg=f"{cname}.{k} left golden tolerance")
+    assert sorted(doc["summary"]) == sorted(pinned["summary"])
+    for k, v in pinned["summary"].items():
+        np.testing.assert_allclose(
+            doc["summary"][k], v, rtol=RTOL, atol=ATOL,
+            err_msg=f"summary metric {k} left golden tolerance")

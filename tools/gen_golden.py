@@ -1,0 +1,39 @@
+"""Regenerate the pinned golden-curve documents under tests/golden/.
+
+Usage (repo root):
+
+    PYTHONPATH=src:. python tools/gen_golden.py            # all runs
+    PYTHONPATH=src:. python tools/gen_golden.py fig1 fig3  # a subset
+
+Run this after any *intentional* change to a reproduced trajectory (new
+RNG consumption order, harness semantics, scenario defaults) and commit
+the refreshed JSON together with the change;
+``tests/test_scenarios_golden.py`` is the gate that catches the
+unintentional ones.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT / "src"), str(_ROOT)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.golden import GOLDEN_RUNS, generate
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("names", nargs="*", metavar="NAME",
+                   help=f"golden runs to regenerate "
+                        f"(default: all of {sorted(GOLDEN_RUNS)})")
+    a = p.parse_args()
+    for path in generate(a.names or None):
+        print(f"wrote {path.relative_to(_ROOT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""CI scenario smoke: null-scenario parity plus a composed perturbation
+run on the sparse-cohort engine.
+
+Two gates, both on the engine where scenarios interact with the most
+machinery (slot pool, participation sampling, carry tables):
+
+1. **Null parity** — ``scenario="null"`` must be bit-exact against the
+   unscenarioed run: identical per-round metrics and participant counts.
+   Any hook that touches the host RNG, resizes a draw, or fires when it
+   should not shows up here as a trajectory divergence.
+2. **Composed scenario** — ``churn(...)+flash_crowd(...)`` (availability
+   mask x arrival spike) must run to completion with finite losses,
+   participant counts within the sampling budget, and a trajectory that
+   actually differs from baseline (a scenario that parses but never
+   applies is a silent no-op).
+
+Every run's curve is written as an ``osafl-curves/v1`` JSON document under
+``--out`` (default ``experiments/scenario-smoke``); CI uploads them
+``if: always()`` so a red gate still publishes the curves that explain it.
+
+Usage: PYTHONPATH=src python tools/scenario_smoke.py [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+
+from benchmarks import curves  # noqa: E402
+from benchmarks.common import (ExperimentConfig,  # noqa: E402
+                               run_vectorized_experiment)
+
+U, C, ROUNDS, PARTICIPATION = 32, 8, 4, 0.75
+COMPOSED = "churn(p_away=0.5,period=2,away=1)+flash_crowd(period=2,duty=1,scale=2)"
+METRICS = ("round", "test_loss", "test_acc", "participants")
+
+
+def _xc(scenario: str) -> ExperimentConfig:
+    return ExperimentConfig(model="mlp", dataset=2, num_clients=U,
+                            rounds=ROUNDS, capacity=(12, 24), arrivals=4,
+                            batch=8, seed=9, request_backend="stacked",
+                            cohort_size=C, participation=PARTICIPATION,
+                            scenario=scenario)
+
+
+def _key(history):
+    return [tuple(h[k] for k in METRICS) for h in history]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=os.path.join(_ROOT, "experiments",
+                                                  "scenario-smoke"),
+                    help="directory for per-scenario curve JSON documents")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    runs = {"baseline": "", "null": "null", "composed": COMPOSED}
+    hists = {}
+    for name, spec in runs.items():
+        hists[name] = run_vectorized_experiment("osafl", _xc(spec),
+                                                eval_samples=64)
+        doc = curves.make_doc(
+            name="scenario_smoke", preset="smoke",
+            config={"U": U, "C": C, "rounds": ROUNDS,
+                    "participation": PARTICIPATION, "scenario": spec},
+            curves=[curves.curve_from_history(name, hists[name], "osafl",
+                                              spec)],
+            summary={"final_loss": float(hists[name][-1]["test_loss"])})
+        curves.write_doc(os.path.join(args.out, f"{name}.json"), doc)
+
+    bad = []
+    if _key(hists["baseline"]) != _key(hists["null"]):
+        bad.append("null scenario diverged from the unscenarioed run")
+    if _key(hists["baseline"]) == _key(hists["composed"]):
+        bad.append("composed scenario did not perturb the trajectory")
+    budget = max(1, int(round(PARTICIPATION * C)))
+    for name, hist in hists.items():
+        if len(hist) != ROUNDS:
+            bad.append(f"{name}: {len(hist)} rounds, expected {ROUNDS}")
+        for h in hist:
+            if not np.isfinite(h["test_loss"]):
+                bad.append(f"{name} round {h['round']}: non-finite loss")
+            if h["participants"] > budget:
+                bad.append(f"{name} round {h['round']}: "
+                           f"{h['participants']} participants > {budget}")
+    for name, hist in hists.items():
+        print(f"{name:>9}: participants="
+              f"{[h['participants'] for h in hist]} "
+              f"final_loss={hist[-1]['test_loss']:.4f}")
+    for msg in bad:
+        print("FAIL:", msg)
+    if bad:
+        print("scenario smoke FAILED")
+        return 1
+    print(f"scenario smoke OK: null bit-exact on the cohort engine "
+          f"(U={U}, C={C}), '{COMPOSED}' composes and perturbs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
