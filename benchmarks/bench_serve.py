@@ -1,0 +1,160 @@
+"""Serving-path benchmark: hot-reload latency + checkpoint-writer overhead.
+
+Two measurements against the streaming checkpoint layer
+(``checkpoint/streaming.py``) and the train-while-serve server
+(``launch/serve.py``):
+
+  * reload: a short mlp run publishes real RunState snapshots; then (a)
+    cold maps — a fresh ``ModelServer`` polls and maps the newest snapshot,
+    timed end-to-end (scan + claim + load + unflatten + jit-bind) — and (b)
+    hot swaps — a server already serving round k remaps when round k+1
+    appears, the production reload. Medians over ``--trials`` fresh
+    servers; per-reload staleness comes from the server's own reload log.
+  * round_overhead: the same ``run_vectorized_experiment`` mlp run three
+    ways — no checkpointing, ``checkpoint_async=True`` (the v2 background
+    writer: submit = tree walk only) and ``checkpoint_async=False`` (the
+    blocking v1 npz save on the round loop) — with ``save_every_k=1`` so
+    every round pays the writer. Reported as steady-state mean ``round_s``
+    (first, compile-bearing round dropped) and the per-round overhead each
+    writer adds over the no-checkpoint baseline. The async overhead should
+    be a small fraction of the blocking one; the numbers land in the CI
+    artifact (serve-smoke lane) rather than behind a brittle wall-clock
+    gate.
+
+Usage: python benchmarks/bench_serve.py [--smoke] [--json PATH]
+(runs from any CWD: the script shims repo root + ``src/`` onto sys.path)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import statistics
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+if __package__ in (None, ""):    # executed as a script: python benchmarks/...
+    _ROOT = Path(__file__).resolve().parent.parent
+    for _p in (str(_ROOT / "src"), str(_ROOT)):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+import numpy as np
+
+from benchmarks.common import (ExperimentConfig, checkpoint_path,
+                               run_vectorized_experiment)
+from repro.launch.serve import ModelServer, make_request_batch
+
+
+def _bench_cfg(rounds: int) -> ExperimentConfig:
+    return ExperimentConfig(model="mlp", dataset=2, num_clients=32,
+                            rounds=rounds, capacity=(12, 24), arrivals=4,
+                            batch=8, seed=7)
+
+
+def _steady_round_s(history) -> float:
+    """Mean round_s with the first (compile-bearing) round dropped."""
+    rs = [h["round_s"] for h in history[1:]] or \
+        [h["round_s"] for h in history]
+    return float(statistics.fmean(rs))
+
+
+def bench_reload(workdir: Path, rounds: int, trials: int) -> dict:
+    """Cold-map and hot-swap reload latency over real snapshots."""
+    src = workdir / "train"
+    run_vectorized_experiment("osafl", _bench_cfg(rounds), eval_samples=32,
+                              save_every_k=1, checkpoint_dir=src)
+    snaps = sorted(p for p in src.iterdir() if p.is_dir())
+    assert len(snaps) >= 2, snaps
+    cold, swap, behind = [], [], []
+    for trial in range(trials):
+        serve_dir = workdir / f"serve{trial}"
+        shutil.copytree(src / snaps[-2].name,
+                        serve_dir / snaps[-2].name)
+        with ModelServer(serve_dir) as server:
+            assert server.poll(), "cold map did not happen"
+            # pin + score once so the jitted forward is compiled before the
+            # hot swap is timed (a production server is warm)
+            server.score(make_request_batch(
+                np.random.default_rng(0), 8, 2))
+            shutil.copytree(src / snaps[-1].name,
+                            serve_dir / snaps[-1].name)
+            assert server.poll(), "hot swap did not happen"
+            log = server.stats()["reloads"]
+        cold.append(log[0]["reload_s"])
+        swap.append(log[1]["reload_s"])
+        behind.append(log[1]["behind"])
+        shutil.rmtree(serve_dir)
+    return {"trials": trials,
+            "cold_map_s": float(statistics.median(cold)),
+            "hot_swap_s": float(statistics.median(swap)),
+            "behind_at_swap": behind}
+
+
+def bench_round_overhead(workdir: Path, rounds: int) -> dict:
+    """Steady-state round time without checkpoints vs the async v2 writer
+    vs the blocking v1 save, save_every_k=1."""
+    xc = _bench_cfg(rounds)
+    out = {}
+    for mode, kw in (
+            ("none", {}),
+            ("async_v2", {"save_every_k": 1,
+                          "checkpoint_dir": workdir / "async",
+                          "checkpoint_async": True}),
+            ("blocking_v1", {"save_every_k": 1,
+                             "checkpoint_dir": workdir / "blocking",
+                             "checkpoint_async": False})):
+        t0 = time.perf_counter()
+        hist = run_vectorized_experiment("osafl", xc, eval_samples=32, **kw)
+        out[mode] = {"round_s": _steady_round_s(hist),
+                     "total_s": time.perf_counter() - t0}
+    base = out["none"]["round_s"]
+    for mode in ("async_v2", "blocking_v1"):
+        out[mode]["overhead_s_per_round"] = out[mode]["round_s"] - base
+    # sanity: both checkpointed runs actually published their snapshots
+    for mode in ("async", "blocking"):
+        final = checkpoint_path(workdir / mode, rounds)
+        assert final.exists() or final.with_suffix(".npz").exists(), final
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Benchmark serving hot-reload latency and the round-"
+        "loop overhead of async (v2) vs blocking (v1) checkpointing.")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: fewer rounds/trials")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--trials", type=int, default=None)
+    ap.add_argument("--json", type=Path, default=None,
+                    help="write the measurement dict to this path")
+    args = ap.parse_args(argv)
+    rounds = args.rounds or (4 if args.smoke else 10)
+    trials = args.trials or (3 if args.smoke else 5)
+
+    results = {"schema": "bench_serve/v1", "rounds": rounds}
+    with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as td:
+        td = Path(td)
+        results["reload"] = bench_reload(td / "reload", rounds, trials)
+        results["round_overhead"] = bench_round_overhead(td / "ovh", rounds)
+
+    rel = results["reload"]
+    print(f"reload: cold map {rel['cold_map_s'] * 1e3:.1f} ms, "
+          f"hot swap {rel['hot_swap_s'] * 1e3:.1f} ms "
+          f"(median of {rel['trials']})")
+    ovh = results["round_overhead"]
+    print(f"round: none {ovh['none']['round_s'] * 1e3:.1f} ms, "
+          f"async v2 +{ovh['async_v2']['overhead_s_per_round'] * 1e3:.1f} "
+          f"ms, blocking v1 "
+          f"+{ovh['blocking_v1']['overhead_s_per_round'] * 1e3:.1f} ms")
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(results, indent=2))
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

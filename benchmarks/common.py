@@ -50,12 +50,36 @@ def checkpoint_path(checkpoint_dir, t: int) -> Path:
     return Path(checkpoint_dir) / f"round_{t:05d}"
 
 
-def _validate_ckpt_args(save_every_k, checkpoint_dir) -> None:
+def _validate_ckpt_args(save_every_k, checkpoint_dir,
+                        keep_last=None) -> None:
     if bool(save_every_k) != (checkpoint_dir is not None):
         raise ValueError(
             "save_every_k and checkpoint_dir must be passed together "
             f"(got save_every_k={save_every_k!r}, "
             f"checkpoint_dir={checkpoint_dir!r})")
+    if keep_last is not None:
+        if not save_every_k:
+            raise ValueError(
+                "keep_last requires save_every_k/checkpoint_dir (there is "
+                "nothing to prune without periodic snapshots)")
+        if not isinstance(keep_last, int) or keep_last < 1:
+            raise ValueError(
+                f"keep_last must be a positive int, got {keep_last!r}")
+
+
+def _make_ckpt_writer(save_every_k, checkpoint_async: bool, keep_last):
+    """The harness's checkpoint writer, or None when checkpointing is off.
+    Async (default) = the v2 per-shard background writer: ``submit`` on the
+    round loop only walks the state tree, ``close()`` at harness exit is
+    the drain barrier that makes resume determinism hold. Blocking = the
+    synchronous v1 npz path (the write oracle ``bench_serve.py`` measures
+    the async writer against, and the harness-level v1→v2 read-compat
+    anchor)."""
+    if not save_every_k:
+        return None
+    if checkpoint_async:
+        return checkpoint.AsyncCheckpointWriter(keep_last=keep_last)
+    return checkpoint.BlockingCheckpointWriter(keep_last=keep_last)
 
 
 def _run_shape(xc: "ExperimentConfig", eval_samples: int) -> dict:
@@ -187,15 +211,17 @@ def _draw(stream, n, dataset):
 
 def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400,
                    save_every_k: int = None, checkpoint_dir=None,
-                   resume_from=None):
+                   resume_from=None, keep_last: int = None):
     """One FL training run; returns per-round test metrics.
 
     With ``save_every_k``/``checkpoint_dir`` set, a full RunState snapshot
     (params, contribution buffers, FIFO buffers incl. staged arrivals,
     scores, staleness flags, every Generator stream) is written after every
     k-th round; ``resume_from`` restores one and continues the trajectory
-    bit-identically (tests/test_checkpoint_resume.py)."""
-    _validate_ckpt_args(save_every_k, checkpoint_dir)
+    bit-identically (tests/test_checkpoint_resume.py). The loop oracle
+    always writes synchronous v1 snapshots — it is the write-path anchor
+    for v1→v2 read compat; ``keep_last`` prunes all but the newest N."""
+    _validate_ckpt_args(save_every_k, checkpoint_dir, keep_last)
     if xc.request_backend != "python":
         raise ValueError(
             "run_experiment is the per-client oracle harness and only "
@@ -244,6 +270,7 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400,
                                cell_radius_m=xc.cell_radius_m)
     n_params = MODEL_PARAMS.get(model, 1_000_000)
 
+    writer = _make_ckpt_writer(save_every_k, False, keep_last)
     history, start_round = [], 0
     if resume_from is not None:
         snap = checkpoint.load_run_state(resume_from)
@@ -284,7 +311,7 @@ def run_experiment(alg: str, xc: ExperimentConfig, eval_samples: int = 400,
                         "participants": len(updates),
                         "round_s": time.perf_counter() - t_start})
         if save_every_k and (t + 1) % save_every_k == 0:
-            checkpoint.save_run_state(
+            writer.submit(
                 checkpoint_path(checkpoint_dir, t + 1),
                 {"engine": "loop", "alg": alg,
                  "config": _run_shape(xc, eval_samples), "next_round": t + 1,
@@ -588,7 +615,8 @@ def build_fused_engine(alg: str, xc: ExperimentConfig,
 
 
 def _run_fused(alg: str, xc: ExperimentConfig, eval_samples: int,
-               save_every_k, checkpoint_dir, resume_from):
+               save_every_k, checkpoint_dir, resume_from, checkpoint_async,
+               keep_last):
     """The ``round_backend="fused"`` body of ``run_vectorized_experiment``:
     the same trajectory state and RunState checkpoints, but rounds execute
     in single-dispatch segments of up to ``xc.rounds_per_dispatch``
@@ -598,6 +626,7 @@ def _run_fused(alg: str, xc: ExperimentConfig, eval_samples: int,
     host draws don't exist, so ``request_gen_s`` is 0 and ``round_s`` is
     the fully-synced segment wall clock divided by its length."""
     engine, s = build_fused_engine(alg, xc, eval_samples)
+    writer = _make_ckpt_writer(save_every_k, checkpoint_async, keep_last)
     history, start_round = [], 0
     if resume_from is not None:
         snap = checkpoint.load_run_state(resume_from)
@@ -605,36 +634,42 @@ def _run_fused(alg: str, xc: ExperimentConfig, eval_samples: int,
         history, start_round = _resume_stacked(s, snap)
     carry = engine.init_carry(s.server, s.sbuf, s.rstream, start_round)
     t, outs = start_round, None
-    while t < xc.rounds:
-        seg = min(xc.rounds_per_dispatch, xc.rounds - t)
-        if save_every_k:
-            boundary = (t // save_every_k + 1) * save_every_k
-            seg = min(seg, boundary - t)
-        t_start = time.perf_counter()
-        carry, outs = engine.run_segment(carry, seg)
-        outs = jax.tree.map(np.asarray, outs)       # sync: honest round_s
-        seg_s = time.perf_counter() - t_start
-        engine.check_outputs(outs)
-        for i in range(seg):
-            history.append({"round": t + i,
-                            "test_loss": float(outs["test_loss"][i]),
-                            "test_acc": float(outs["test_acc"][i]),
-                            "participants": int(outs["participants"][i]),
-                            "request_gen_s": 0.0,
-                            "round_s": seg_s / seg})
-        t += seg
-        if save_every_k and t % save_every_k == 0:
-            engine.write_back(carry, outs, s.server, s.sbuf, s.rstream)
-            checkpoint.save_run_state(
-                checkpoint_path(checkpoint_dir, t),
-                {"engine": "stacked", "alg": alg,
-                 "config": _run_shape(xc, eval_samples), "next_round": t,
-                 "rng": checkpoint.generator_state(s.rng),
-                 "server": s.server.state_dict(),
-                 "buffer": s.sbuf.state_dict(),
-                 "streams": s.rstream.state_dict(),
-                 "history": history},
-                metadata={"engine": "stacked", "alg": alg, "round": t})
+    try:
+        while t < xc.rounds:
+            seg = min(xc.rounds_per_dispatch, xc.rounds - t)
+            if save_every_k:
+                boundary = (t // save_every_k + 1) * save_every_k
+                seg = min(seg, boundary - t)
+            t_start = time.perf_counter()
+            carry, outs = engine.run_segment(carry, seg)
+            outs = jax.tree.map(np.asarray, outs)   # sync: honest round_s
+            seg_s = time.perf_counter() - t_start
+            engine.check_outputs(outs)
+            for i in range(seg):
+                history.append({"round": t + i,
+                                "test_loss": float(outs["test_loss"][i]),
+                                "test_acc": float(outs["test_acc"][i]),
+                                "participants": int(outs["participants"][i]),
+                                "request_gen_s": 0.0,
+                                "round_s": seg_s / seg})
+            t += seg
+            if save_every_k and t % save_every_k == 0:
+                engine.write_back(carry, outs, s.server, s.sbuf, s.rstream)
+                writer.submit(
+                    checkpoint_path(checkpoint_dir, t),
+                    {"engine": "stacked", "alg": alg,
+                     "config": _run_shape(xc, eval_samples), "next_round": t,
+                     "rng": checkpoint.generator_state(s.rng),
+                     "server": s.server.state_dict(),
+                     "buffer": s.sbuf.state_dict(),
+                     "streams": s.rstream.state_dict(),
+                     "history": history},
+                    metadata={"engine": "stacked", "alg": alg, "round": t})
+        if writer is not None:
+            writer.close()          # drain barrier: all snapshots committed
+    finally:
+        if writer is not None:
+            writer.shutdown()
     if outs is not None:
         engine.write_back(carry, outs, s.server, s.sbuf, s.rstream)
     return history
@@ -643,7 +678,8 @@ def _run_fused(alg: str, xc: ExperimentConfig, eval_samples: int,
 def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
                               eval_samples: int = 400,
                               save_every_k: int = None, checkpoint_dir=None,
-                              resume_from=None):
+                              resume_from=None, checkpoint_async: bool = True,
+                              keep_last: int = None):
     """Stacked-engine counterpart of ``run_experiment``: the whole cohort
     trains under one ``jax.vmap``, the server round is one vectorized
     (U, N)-buffer update, and the paper's full *online* setting runs in
@@ -659,6 +695,12 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     mid-stream resume (``_stacked_setup`` re-derives everything
     deterministic from ``xc.seed`` — population, capacities, test set,
     system params — and the snapshot then overwrites all mutable state).
+    Snapshots default to the streaming v2 writer (``checkpoint/streaming.py``:
+    per-shard files written by a background thread, committed atomically;
+    ``close()`` at harness exit is the drain barrier that keeps resume
+    determinism); ``checkpoint_async=False`` falls back to the synchronous
+    v1 npz save. ``keep_last`` prunes all but the newest N committed
+    snapshots after each save (live-server claims are never pruned).
 
     ``xc.request_backend`` picks the request model: ``"python"`` draws from
     the per-user oracle streams (the last O(U) Python loop per round);
@@ -674,51 +716,61 @@ def run_vectorized_experiment(alg: str, xc: ExperimentConfig,
     users only. ``cohort_size=num_clients`` is bit-exact against the dense
     path (tests/test_cohort.py); DESIGN.md "Sparse cohorts" has the layout.
     """
-    _validate_ckpt_args(save_every_k, checkpoint_dir)
+    _validate_ckpt_args(save_every_k, checkpoint_dir, keep_last)
     if xc.round_backend not in ("dispatch", "fused"):
         raise ValueError(f"unknown round_backend {xc.round_backend!r} "
                          "(expected 'dispatch' or 'fused')")
     if xc.round_backend == "fused":
         return _run_fused(alg, xc, eval_samples, save_every_k,
-                          checkpoint_dir, resume_from)
+                          checkpoint_dir, resume_from, checkpoint_async,
+                          keep_last)
     s = _stacked_setup(alg, xc, eval_samples)
     local_step = make_vmapped_local_train(
         s.grad_fn, s.fl.local_lr, s.fl.kappa_max, prox_mu=s.prox_mu)
 
+    writer = _make_ckpt_writer(save_every_k, checkpoint_async, keep_last)
     history, start_round = [], 0
     if resume_from is not None:
         snap = checkpoint.load_run_state(resume_from)
         _check_snapshot(snap, "stacked", alg, xc, eval_samples)
         history, start_round = _resume_stacked(s, snap)
-    for t in range(start_round, xc.rounds):
-        t_start = time.perf_counter()
-        req_s, kappas, active, slots = _draw_round_inputs(s, xc, t)
-        d, w = local_step(s.server.params, s.sbuf.gather(slots),
-                          jnp.asarray(kappas))
-        upd = s.codec.flatten_stacked(w if s.weights_alg else d)
-        _server_round(s, alg, upd, active, kappas)
-        loss, m = small_loss(s.server.params, s.test_batch, s.model)
-        # round_s feeds the bench gates: block on every async output of the
-        # round (the server round's weights + the committed buffer), not
-        # just the eval loss
-        jax.block_until_ready((loss, s.server.w, s.sbuf.state))
-        history.append({"round": t, "test_loss": float(loss),
-                        "test_acc": float(m["accuracy"]),
-                        "participants": int(active.sum()),
-                        "request_gen_s": req_s,
-                        "round_s": time.perf_counter() - t_start})
-        if save_every_k and (t + 1) % save_every_k == 0:
-            checkpoint.save_run_state(
-                checkpoint_path(checkpoint_dir, t + 1),
-                {"engine": "stacked", "alg": alg,
-                 "config": _run_shape(xc, eval_samples), "next_round": t + 1,
-                 "rng": checkpoint.generator_state(s.rng),
-                 "server": s.server.state_dict(),
-                 "buffer": s.sbuf.state_dict(),
-                 "streams": (s.rstream.state_dict() if s.stacked_req
-                             else streams_state_dict(s.streams)),
-                 "history": history},
-                metadata={"engine": "stacked", "alg": alg, "round": t + 1})
+    try:
+        for t in range(start_round, xc.rounds):
+            t_start = time.perf_counter()
+            req_s, kappas, active, slots = _draw_round_inputs(s, xc, t)
+            d, w = local_step(s.server.params, s.sbuf.gather(slots),
+                              jnp.asarray(kappas))
+            upd = s.codec.flatten_stacked(w if s.weights_alg else d)
+            _server_round(s, alg, upd, active, kappas)
+            loss, m = small_loss(s.server.params, s.test_batch, s.model)
+            # round_s feeds the bench gates: block on every async output of
+            # the round (the server round's weights + the committed buffer),
+            # not just the eval loss
+            jax.block_until_ready((loss, s.server.w, s.sbuf.state))
+            history.append({"round": t, "test_loss": float(loss),
+                            "test_acc": float(m["accuracy"]),
+                            "participants": int(active.sum()),
+                            "request_gen_s": req_s,
+                            "round_s": time.perf_counter() - t_start})
+            if save_every_k and (t + 1) % save_every_k == 0:
+                writer.submit(
+                    checkpoint_path(checkpoint_dir, t + 1),
+                    {"engine": "stacked", "alg": alg,
+                     "config": _run_shape(xc, eval_samples),
+                     "next_round": t + 1,
+                     "rng": checkpoint.generator_state(s.rng),
+                     "server": s.server.state_dict(),
+                     "buffer": s.sbuf.state_dict(),
+                     "streams": (s.rstream.state_dict() if s.stacked_req
+                                 else streams_state_dict(s.streams)),
+                     "history": history},
+                    metadata={"engine": "stacked", "alg": alg,
+                              "round": t + 1})
+        if writer is not None:
+            writer.close()          # drain barrier: all snapshots committed
+    finally:
+        if writer is not None:
+            writer.shutdown()
     return history
 
 
@@ -748,7 +800,8 @@ def run_pod_online_experiment(alg: str, xc: ExperimentConfig,
                               eval_samples: int = 400, mesh=None,
                               pod_engine: str = "exact_tp",
                               save_every_k: int = None, checkpoint_dir=None,
-                              resume_from=None):
+                              resume_from=None, checkpoint_async: bool = True,
+                              keep_last: int = None):
     """The paper's online setting on the pod engines: the same round as
     ``run_vectorized_experiment`` — FIFO arrivals, batched resource
     optimizer, straggler masking, stacked server — but the cohort's FIFO
@@ -775,12 +828,15 @@ def run_pod_online_experiment(alg: str, xc: ExperimentConfig,
     mesh's client rows — and so must ``xc.cohort_size`` when the sparse
     slot-pool engine is on (the slot-indexed buffer and the per-user carry
     tables both shard over the client axes; see ``core/cohort.py``).
-    Checkpointing mirrors ``run_vectorized_experiment``
-    (engine tag ``"pod"``; the sharded buffer is host-gathered into the npz
-    and re-sharded on resume), and a snapshot additionally refuses to
-    resume into a different ``pod_engine`` or mesh layout.
+    Checkpointing mirrors ``run_vectorized_experiment`` (engine tag
+    ``"pod"``): by default the streaming v2 writer pulls the mesh-sharded
+    buffer and cohort tables *per addressable shard* on a background thread
+    — no host gather of the full ``(U, D, ...)`` storage ever happens — and
+    resume re-shards the reassembled arrays onto the live mesh
+    (``load_state_dict``). A snapshot additionally refuses to resume into a
+    different ``pod_engine`` or mesh layout.
     """
-    _validate_ckpt_args(save_every_k, checkpoint_dir)
+    _validate_ckpt_args(save_every_k, checkpoint_dir, keep_last)
     if xc.round_backend != "dispatch":
         raise ValueError(
             "the pod harness only supports round_backend='dispatch' (the "
@@ -808,40 +864,48 @@ def run_pod_online_experiment(alg: str, xc: ExperimentConfig,
                   "mesh_axes": list(mesh.axis_names),
                   "mesh_shape": [int(n) for n in mesh.devices.shape]}
 
+    writer = _make_ckpt_writer(save_every_k, checkpoint_async, keep_last)
     history, start_round = [], 0
     if resume_from is not None:
         snap = checkpoint.load_run_state(resume_from)
         _check_snapshot(snap, "pod", alg, xc, eval_samples, extra=mesh_shape)
         history, start_round = _resume_stacked(s, snap)
-    for t in range(start_round, xc.rounds):
-        t_start = time.perf_counter()
-        req_s, kappas, active, slots = _draw_round_inputs(s, xc, t)
-        d, w = pod_step(s.server.params, s.sbuf.state.x, s.sbuf.state.y,
-                        jnp.asarray(slots), jnp.asarray(kappas))
-        upd = s.codec.flatten_stacked(w if s.weights_alg else d)
-        _server_round(s, alg, upd, active, kappas)
-        loss, m = small_loss(s.server.params, s.test_batch, s.model)
-        # same fully-synced round_s convention as the vectorized harness
-        jax.block_until_ready((loss, s.server.w, s.sbuf.state))
-        history.append({"round": t, "test_loss": float(loss),
-                        "test_acc": float(m["accuracy"]),
-                        "participants": int(active.sum()),
-                        "request_gen_s": req_s,
-                        "round_s": time.perf_counter() - t_start})
-        if save_every_k and (t + 1) % save_every_k == 0:
-            checkpoint.save_run_state(
-                checkpoint_path(checkpoint_dir, t + 1),
-                {"engine": "pod", "alg": alg,
-                 "config": dict(_run_shape(xc, eval_samples), **mesh_shape),
-                 "next_round": t + 1,
-                 "rng": checkpoint.generator_state(s.rng),
-                 "server": s.server.state_dict(),
-                 "buffer": s.sbuf.state_dict(),
-                 "streams": (s.rstream.state_dict() if s.stacked_req
-                             else streams_state_dict(s.streams)),
-                 "history": history},
-                metadata={"engine": "pod", "alg": alg, "round": t + 1,
-                          "pod_engine": pod_engine})
+    try:
+        for t in range(start_round, xc.rounds):
+            t_start = time.perf_counter()
+            req_s, kappas, active, slots = _draw_round_inputs(s, xc, t)
+            d, w = pod_step(s.server.params, s.sbuf.state.x, s.sbuf.state.y,
+                            jnp.asarray(slots), jnp.asarray(kappas))
+            upd = s.codec.flatten_stacked(w if s.weights_alg else d)
+            _server_round(s, alg, upd, active, kappas)
+            loss, m = small_loss(s.server.params, s.test_batch, s.model)
+            # same fully-synced round_s convention as the vectorized harness
+            jax.block_until_ready((loss, s.server.w, s.sbuf.state))
+            history.append({"round": t, "test_loss": float(loss),
+                            "test_acc": float(m["accuracy"]),
+                            "participants": int(active.sum()),
+                            "request_gen_s": req_s,
+                            "round_s": time.perf_counter() - t_start})
+            if save_every_k and (t + 1) % save_every_k == 0:
+                writer.submit(
+                    checkpoint_path(checkpoint_dir, t + 1),
+                    {"engine": "pod", "alg": alg,
+                     "config": dict(_run_shape(xc, eval_samples),
+                                    **mesh_shape),
+                     "next_round": t + 1,
+                     "rng": checkpoint.generator_state(s.rng),
+                     "server": s.server.state_dict(),
+                     "buffer": s.sbuf.state_dict(),
+                     "streams": (s.rstream.state_dict() if s.stacked_req
+                                 else streams_state_dict(s.streams)),
+                     "history": history},
+                    metadata={"engine": "pod", "alg": alg, "round": t + 1,
+                              "pod_engine": pod_engine})
+        if writer is not None:
+            writer.close()          # drain barrier: all snapshots committed
+    finally:
+        if writer is not None:
+            writer.shutdown()
     return history
 
 

@@ -2,23 +2,84 @@
 
 Demonstrates the serving path used by the decode_32k / long_500k dry-run
 shapes, on a reduced zamba2 (hybrid Mamba2 + shared-attention) whose decode
-state is O(1) in context length.
+state is O(1) in context length. (This is the transformer decode driver
+that used to live in ``repro.launch.serve``; that module now hosts the FL
+train-while-serve loop.)
 
     PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
 """
 import argparse
+import time
 
-from repro.launch.serve import run
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.pod import make_serve_step
+from repro.core.shmap import use_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import init_cache, init_model, whisper_encode
+
+
+def run(arch: str, *, reduced=True, batch=4, prompt_len=32, decode_steps=16,
+        cache_len=128, seed=0, verbose=True):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(seed)
+    params = init_model(key, cfg)
+    memory = None
+    if cfg.encoder is not None:
+        frames = 0.02 * jax.random.normal(
+            key, (batch, cfg.encoder.n_frames, cfg.d_model))
+        memory = whisper_encode(params, frames, cfg)
+        cache_len = min(cache_len, cfg.encoder.max_decoder_len)
+    if cfg.vision is not None:
+        patches = 0.02 * jax.random.normal(
+            key, (batch, cfg.vision.n_patches, cfg.vision.d_vision))
+        memory = patches.astype(jnp.bfloat16) @ params["vision_proj"].astype(
+            jnp.bfloat16)
+
+    cache = init_cache(cfg, batch, cache_len)
+    prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    serve = jax.jit(make_serve_step(cfg))
+
+    with use_mesh(mesh):
+        # prefill via sequential decode (cache-exact; a fused prefill kernel
+        # is the production path, exercised by the prefill_32k dry-run)
+        t0 = time.time()
+        tok = prompt[:, :1]
+        for i in range(prompt_len):
+            tok = prompt[:, i:i + 1]
+            nxt, cache = serve(params, cache, tok, jnp.int32(i), memory)
+        prefill_s = time.time() - t0
+        out = []
+        t0 = time.time()
+        tok = nxt
+        for i in range(decode_steps):
+            tok, cache = serve(params, cache, tok,
+                               jnp.int32(prompt_len + i), memory)
+            out.append(tok)
+        decode_s = time.time() - t0
+    tokens = jnp.concatenate(out, axis=1)
+    if verbose:
+        print(f"{cfg.name}: prefill {prompt_len} toks in {prefill_s:.2f}s; "
+              f"decoded {decode_steps} toks in {decode_s:.2f}s "
+              f"({batch * decode_steps / max(decode_s, 1e-9):.1f} tok/s)")
+        print("sampled token ids:", tokens[0][:12].tolist())
+    return tokens
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="zamba2-2.7b")
+    ap.add_argument("--full", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--decode-steps", type=int, default=24)
     args = ap.parse_args()
-    run(args.arch, reduced=True, batch=args.batch,
+    run(args.arch, reduced=not args.full, batch=args.batch,
         prompt_len=args.prompt_len, decode_steps=args.decode_steps)
 
 

@@ -25,19 +25,31 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.checkpoint.run_state import (FORMAT_VERSION, CheckpointError,
-                                        _npz_path, atomic_write,
-                                        check_version, diff_snapshots,
-                                        find_sidecar, generator_state,
-                                        load_run_state, meta_path,
-                                        parse_sidecar, read_sidecar,
-                                        save_run_state, set_generator_state,
+from repro.checkpoint.run_state import (FORMAT_VERSION, V1_FORMAT,
+                                        CheckpointError, _npz_path,
+                                        atomic_write, check_version,
+                                        diff_snapshots, find_sidecar,
+                                        generator_state, load_run_state,
+                                        meta_path, parse_sidecar,
+                                        read_sidecar, save_run_state,
+                                        set_generator_state,
                                         validate_cohort_shapes)
+from repro.checkpoint.streaming import (AsyncCheckpointWriter,
+                                        BlockingCheckpointWriter, clear_claim,
+                                        committed_snapshots, delete_snapshot,
+                                        is_committed, latest_checkpoint,
+                                        load_run_state_v2, prune_checkpoints,
+                                        save_run_state_v2, snapshot_round,
+                                        write_claim)
 
 __all__ = [
-    "CheckpointError", "FORMAT_VERSION", "diff_snapshots",
-    "generator_state", "load_metadata", "load_run_state", "restore", "save",
-    "save_run_state", "set_generator_state", "validate_cohort_shapes",
+    "AsyncCheckpointWriter", "BlockingCheckpointWriter", "CheckpointError",
+    "FORMAT_VERSION", "V1_FORMAT", "clear_claim", "committed_snapshots",
+    "delete_snapshot", "diff_snapshots", "generator_state", "is_committed",
+    "latest_checkpoint", "load_metadata", "load_run_state",
+    "load_run_state_v2", "prune_checkpoints", "restore", "save",
+    "save_run_state", "save_run_state_v2", "set_generator_state",
+    "snapshot_round", "validate_cohort_shapes", "write_claim",
 ]
 
 
@@ -57,7 +69,7 @@ def save(path, params, step: int = 0, metadata: dict = None):
     flat = _flatten(params)
     atomic_write(_npz_path(path), lambda tmp: np.savez(tmp, **flat))
     atomic_write(meta_path(path), lambda tmp: tmp.write_text(
-        json.dumps({"format_version": FORMAT_VERSION, "kind": "params",
+        json.dumps({"format_version": V1_FORMAT, "kind": "params",
                     "step": step, **(metadata or {})})))
 
 

@@ -20,21 +20,31 @@ snapshot (see DESIGN.md "Checkpoint/restore of online-run state"):
     dict is plain JSON-able ints), so arrivals, channel shadowing and batch
     sampling resume on the exact draw they would have seen uninterrupted.
 
-The format is host-gathered, like the params helper: adequate for the CPU
-engines; a sharded deployment would swap in per-shard array serialization
-behind the same tree codec.
+Two on-disk layouts share this tree codec:
+
+  * v1 (``save_run_state`` here): one host-gathered ``.npz`` + sidecar pair —
+    adequate for the CPU engines and kept as the read-compatible oracle
+    format.
+  * v2 (``checkpoint/streaming.py``): a per-snapshot *directory* of per-shard
+    ``.npy`` files + manifest + commit marker, written without host-gathering
+    mesh-sharded leaves; ``load_run_state`` dispatches on the path form and
+    reads both.
 """
 from __future__ import annotations
 
 import copy
 import json
 import os
+import zipfile
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-FORMAT_VERSION = 1
+# newest readable snapshot format; v1 saves stamp V1_FORMAT so snapshots they
+# write stay readable by pre-v2 builds
+FORMAT_VERSION = 2
+V1_FORMAT = 1
 _ARRAY_KEY = "__array__"
 
 
@@ -88,8 +98,16 @@ def set_generator_state(rng: np.random.Generator, state: dict) -> None:
 # nested-tree codec
 # ---------------------------------------------------------------------------
 
-def _encode(obj, arrays: Dict[str, np.ndarray], path: str):
-    """Nested state -> JSON skeleton, array leaves moved into ``arrays``."""
+def _encode(obj, arrays: Dict[str, Any], path: str,
+            copy_host: bool = False):
+    """Nested state -> JSON skeleton, array leaves moved into ``arrays``.
+
+    Array leaves are stored as *references* (device arrays stay on device —
+    the writer decides whether to gather whole or pull per shard). With
+    ``copy_host`` host numpy leaves are defensively copied at encode time:
+    the async writer snapshots state the round loop keeps mutating in place
+    (``SlotPool`` clocks, the baseline servers' ``sizes``/``kappas`` arrays),
+    while jax arrays are immutable and safe to hold by reference."""
     if obj is None or isinstance(obj, (bool, int, float, str)):
         return obj
     if isinstance(obj, np.integer):
@@ -99,7 +117,9 @@ def _encode(obj, arrays: Dict[str, np.ndarray], path: str):
     if isinstance(obj, np.bool_):
         return bool(obj)
     if hasattr(obj, "__array__") and hasattr(obj, "dtype"):
-        arrays[path] = np.asarray(obj)
+        if copy_host and isinstance(obj, np.ndarray):
+            obj = obj.copy()
+        arrays[path] = obj
         return {_ARRAY_KEY: path}
     if isinstance(obj, dict):
         out = {}
@@ -108,10 +128,11 @@ def _encode(obj, arrays: Dict[str, np.ndarray], path: str):
                 raise CheckpointError(
                     f"state dict key {k!r} at {path!r} is not serializable "
                     f"(keys must be strings, {_ARRAY_KEY!r} is reserved)")
-            out[k] = _encode(v, arrays, f"{path}/{k}")
+            out[k] = _encode(v, arrays, f"{path}/{k}", copy_host)
         return out
     if isinstance(obj, (list, tuple)):
-        return [_encode(v, arrays, f"{path}/{i}") for i, v in enumerate(obj)]
+        return [_encode(v, arrays, f"{path}/{i}", copy_host)
+                for i, v in enumerate(obj)]
     raise CheckpointError(
         f"cannot serialize {type(obj).__name__} at {path!r}")
 
@@ -224,29 +245,43 @@ def save_run_state(path, state, metadata: dict = None) -> None:
     sidecar (or vice versa) if the process dies between the two replaces —
     consecutive snapshots of one run share identical tree paths, so without
     the id such a torn pair would decode without error."""
-    arrays: Dict[str, np.ndarray] = {}
+    arrays: Dict[str, Any] = {}
     tree = _encode(state, arrays, "s")
     save_id = f"{np.random.SeedSequence().entropy:032x}"
-    arrays[_SAVE_ID_KEY] = np.array(save_id)
+    arrays[_SAVE_ID_KEY] = save_id
     npz = _npz_path(path)
     npz.parent.mkdir(parents=True, exist_ok=True)
-    atomic_write(npz, lambda tmp: np.savez(tmp, **arrays))
+    atomic_write(npz, lambda tmp: np.savez(
+        tmp, **{k: np.asarray(v) for k, v in arrays.items()}))
     atomic_write(meta_path(path), lambda tmp: tmp.write_text(json.dumps(
-        {"format_version": FORMAT_VERSION, "kind": "run_state",
+        {"format_version": V1_FORMAT, "kind": "run_state",
          "save_id": save_id, "tree": tree, "metadata": metadata or {}})))
 
 
 def load_run_state(path):
-    """Read a ``save_run_state`` snapshot back into nested plain structures
-    (dicts / lists / scalars / np arrays). Version-checked; a mismatched
-    npz/sidecar pair (interrupted overwrite) raises ``CheckpointError``."""
+    """Read a run-state snapshot back into nested plain structures (dicts /
+    lists / scalars / np arrays). Dispatches on the path form: a snapshot
+    *directory* is the v2 per-shard layout (``checkpoint/streaming.py``), a
+    ``.npz`` + sidecar pair is v1. Version-checked; a mismatched pair
+    (interrupted overwrite), a truncated archive or a corrupt shard raises
+    ``CheckpointError`` naming the bad artifact — never a silent partial
+    restore."""
+    if Path(str(path).removesuffix(".npz")).is_dir():
+        from repro.checkpoint import streaming
+        return streaming.load_run_state_v2(Path(str(path)
+                                                .removesuffix(".npz")))
     meta = read_sidecar(path)
     check_version(meta, path, expect_kind="run_state")
     npz = _npz_path(path)
     if not npz.exists():
         raise CheckpointError(f"checkpoint array file {npz} not found")
-    with np.load(npz) as data:
-        data = dict(data.items())
+    try:
+        with np.load(npz) as data:
+            data = dict(data.items())
+    except (zipfile.BadZipFile, ValueError, OSError, EOFError) as e:
+        raise CheckpointError(
+            f"checkpoint array file {npz} is corrupt or truncated: "
+            f"{e}") from e
     sid = meta.get("save_id")
     got = data.pop(_SAVE_ID_KEY, None)
     # a pre-save_id snapshot has the id on neither side; any single-sided or

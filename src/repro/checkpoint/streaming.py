@@ -1,0 +1,516 @@
+"""Streaming per-shard run-state snapshots (``run_state/v2``) + retention.
+
+The v1 layout (``run_state.py``) host-gathers every array into one blocking
+``.npz`` on the round loop — already the wrong shape at one host for a
+mesh-sharded pod buffer, fatal multi-host. v2 replaces the archive with a
+per-snapshot *directory*:
+
+    round_00006/
+      a00000.s00.npy ... a00042.s07.npy   per-shard array files
+      manifest.json                       tree skeleton + shard table
+      COMMIT.json                         commit marker, written last
+
+  * Each array leaf is written as one ``.npy`` file *per addressable shard*
+    (``jax.Array.addressable_shards``): a ``NamedSharding``-split pod buffer
+    or cohort table never materializes host-side as a whole. Replicated and
+    host-numpy leaves write a single full shard.
+  * ``manifest.json`` carries the JSON tree skeleton (same ``__array__``
+    codec as v1), and per leaf the dtype/shape plus every shard's file name,
+    index extents, byte length and crc32.
+  * ``COMMIT.json`` (save id + manifest sha256) is atomically written
+    **last**: a snapshot is either complete or invisible. Readers refuse a
+    missing/garbled marker, a manifest that does not hash to the committed
+    sha, and any shard whose length or crc mismatches — naming the bad
+    artifact (tests/test_checkpoint_crash.py SIGKILLs a writer at random
+    offsets to enforce this).
+
+``AsyncCheckpointWriter`` feeds a background thread through a bounded queue:
+``submit`` only walks the state tree (host numpy leaves are defensively
+copied — the round loop mutates them in place; jax arrays are immutable
+references), the device→host shard pulls and disk writes happen off the
+round loop, and ``close()`` is the drain barrier the harnesses call at exit
+so resume determinism is preserved. ``BlockingCheckpointWriter`` is the
+uniform-interface v1 fallback (``checkpoint_async=False``) and the oracle
+the async path is benchmarked against (benchmarks/bench_serve.py).
+
+Retention: ``prune_checkpoints(dir, keep_last)`` deletes all but the newest
+``keep_last`` *committed* snapshots, but never one named by a live server's
+``SERVING-<token>.json`` claim file (``write_claim``) — the prune-vs-reload
+race is closed by claim-before-load on the server side
+(``launch/serve.py``).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import re
+import shutil
+import threading
+import queue
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint.run_state import (CheckpointError, _decode, _encode,
+                                        _npz_path, atomic_write,
+                                        check_version, find_sidecar,
+                                        save_run_state)
+
+V2_FORMAT = 2
+MANIFEST_NAME = "manifest.json"
+COMMIT_NAME = "COMMIT.json"
+CLAIM_PREFIX = "SERVING-"
+
+# test seam: called after each shard file hits disk (the crash suite widens
+# the SIGKILL window with it); never set in production code
+_POST_SHARD_HOOK = None
+
+
+def _stem(path) -> Path:
+    """Snapshot paths are given as stems (``.../round_00006``); tolerate the
+    v1 ``.npz``-suffixed form so both layouts share call sites."""
+    return Path(str(path).removesuffix(".npz"))
+
+
+# ---------------------------------------------------------------------------
+# v2 write
+# ---------------------------------------------------------------------------
+
+def _norm_index(index, shape) -> Tuple[Tuple[int, int], ...]:
+    """A shard's ``.index`` (tuple of slices) -> concrete (start, stop)
+    extents; replicated axes carry ``slice(None)`` which normalizes to the
+    full extent, so replicated shards of one array dedupe to one entry."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = int(dim) if sl.stop is None else int(sl.stop)
+        out.append((start, stop))
+    return tuple(out)
+
+
+def _leaf_shards(ref) -> List[Tuple[Tuple[Tuple[int, int], ...], np.ndarray]]:
+    """[(index extents, host shard)] covering ``ref``. Mesh-sharded jax
+    arrays are pulled shard-by-shard (no host gather of the full array);
+    replicated/single-device/numpy leaves yield one full shard. Falls back
+    to the full array when the addressable shards do not cover it (a
+    multi-host topology — per-host manifests are the documented follow-up)."""
+    import jax
+
+    shape = tuple(int(n) for n in np.shape(ref))
+    if isinstance(ref, jax.Array) and shape:
+        try:
+            addressable = list(ref.addressable_shards)
+        except Exception:
+            addressable = []
+        shards: Dict[Tuple, Any] = {}
+        for sh in addressable:
+            shards.setdefault(_norm_index(sh.index, shape), sh.data)
+        total = sum(int(np.prod([b - a for a, b in idx], initial=1))
+                    for idx in shards)
+        if shards and total == int(np.prod(shape, initial=1)):
+            return [(idx, np.asarray(data))
+                    for idx, data in sorted(shards.items())]
+    return [(tuple((0, n) for n in shape), np.asarray(ref))]
+
+
+def _write_v2(path, tree, arrays: Dict[str, Any], metadata: dict) -> None:
+    """Write one committed v2 snapshot directory. ``arrays`` holds *array
+    references* from ``_encode`` (device arrays still on device). Overwriting
+    an existing snapshot unlinks its commit marker first, so a crash mid-
+    rewrite can never leave a stale marker next to fresh shard files."""
+    d = _stem(path)
+    d.mkdir(parents=True, exist_ok=True)
+    (d / COMMIT_NAME).unlink(missing_ok=True)
+    (d / MANIFEST_NAME).unlink(missing_ok=True)
+    for old in d.glob("*.npy"):
+        old.unlink()
+    save_id = f"{np.random.SeedSequence().entropy:032x}"
+    entries = {}
+    for i, (key, ref) in enumerate(arrays.items()):
+        shards = []
+        dtype = None
+        for j, (idx, data) in enumerate(_leaf_shards(ref)):
+            fname = f"a{i:05d}.s{j:02d}.npy"
+            buf = io.BytesIO()
+            # NB: np.ascontiguousarray promotes 0-d to 1-d; guard on ndim
+            np.save(buf, np.ascontiguousarray(data) if data.ndim else data,
+                    allow_pickle=False)
+            payload = buf.getvalue()
+            (d / fname).write_bytes(payload)
+            if _POST_SHARD_HOOK is not None:
+                _POST_SHARD_HOOK()
+            dtype = str(data.dtype)
+            shards.append({"file": fname,
+                           "index": [[int(a), int(b)] for a, b in idx],
+                           "crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+                           "nbytes": len(payload)})
+        entries[key] = {"dtype": dtype,
+                        "shape": [int(n) for n in np.shape(ref)],
+                        "shards": shards}
+    manifest = {"format_version": V2_FORMAT, "kind": "run_state",
+                "save_id": save_id, "tree": tree, "metadata": metadata,
+                "arrays": entries}
+    mbytes = json.dumps(manifest).encode()
+    atomic_write(d / MANIFEST_NAME, lambda t: t.write_bytes(mbytes))
+    atomic_write(d / COMMIT_NAME, lambda t: t.write_text(json.dumps(
+        {"format_version": V2_FORMAT, "save_id": save_id,
+         "manifest_sha256": hashlib.sha256(mbytes).hexdigest()})))
+
+
+def save_run_state_v2(path, state, metadata: dict = None) -> None:
+    """Synchronous v2 save (the async writer inlined): same tree contract as
+    ``save_run_state``, per-shard directory layout on disk."""
+    arrays: Dict[str, Any] = {}
+    tree = _encode(state, arrays, "s")
+    _write_v2(path, tree, arrays, dict(metadata or {}))
+
+
+# ---------------------------------------------------------------------------
+# v2 read
+# ---------------------------------------------------------------------------
+
+def read_manifest(path) -> dict:
+    """The committed manifest of a v2 snapshot directory: requires the
+    commit marker, verifies the manifest hashes to the committed sha and
+    that both sides name the same save. Raises ``CheckpointError`` naming
+    the bad artifact."""
+    d = _stem(path)
+    commit_p = d / COMMIT_NAME
+    if not commit_p.exists():
+        raise CheckpointError(
+            f"snapshot {d} has no commit marker {COMMIT_NAME} — the write "
+            "never completed (crashed writer?); refusing a partial restore")
+    try:
+        commit = json.loads(commit_p.read_text())
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointError(
+            f"corrupt commit marker {commit_p}: {e}") from e
+    man_p = d / MANIFEST_NAME
+    if not man_p.exists():
+        raise CheckpointError(f"snapshot manifest {man_p} not found")
+    mbytes = man_p.read_bytes()
+    sha = hashlib.sha256(mbytes).hexdigest()
+    if sha != commit.get("manifest_sha256"):
+        raise CheckpointError(
+            f"snapshot manifest {man_p} does not hash to the committed "
+            f"sha256 (torn overwrite or corruption)")
+    manifest = json.loads(mbytes)
+    check_version(manifest, d, expect_kind="run_state")
+    if manifest.get("save_id") != commit.get("save_id"):
+        raise CheckpointError(
+            f"snapshot {d} is torn: manifest and commit marker come from "
+            "different saves")
+    return manifest
+
+
+def _read_leaf(d: Path, key: str, ent: dict) -> np.ndarray:
+    dtype = np.dtype(ent["dtype"])
+    shape = tuple(int(n) for n in ent["shape"])
+    full = np.empty(shape, dtype)
+    count = 0
+    for shard in ent["shards"]:
+        f = d / shard["file"]
+        if not f.exists():
+            raise CheckpointError(
+                f"snapshot {d} array {key!r}: shard file {f.name} is "
+                "missing")
+        payload = f.read_bytes()
+        if len(payload) != int(shard["nbytes"]):
+            raise CheckpointError(
+                f"snapshot {d} array {key!r}: shard file {f.name} is "
+                f"truncated ({len(payload)} of {shard['nbytes']} bytes)")
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != int(shard["crc32"]):
+            raise CheckpointError(
+                f"snapshot {d} array {key!r}: shard file {f.name} fails "
+                "its crc32 check (corrupt or from a different save)")
+        try:
+            arr = np.load(io.BytesIO(payload), allow_pickle=False)
+        except Exception as e:
+            raise CheckpointError(
+                f"snapshot {d} array {key!r}: shard file {f.name} is not "
+                f"a readable npy: {e}") from e
+        idx = tuple((int(a), int(b)) for a, b in shard["index"])
+        want = tuple(b - a for a, b in idx)
+        if arr.shape != want or arr.dtype != dtype:
+            raise CheckpointError(
+                f"snapshot {d} array {key!r}: shard file {f.name} holds "
+                f"{arr.dtype}{arr.shape}, manifest says {dtype}{want}")
+        full[tuple(slice(a, b) for a, b in idx)] = arr
+        count += int(arr.size) if shape else 1
+    if count != (int(full.size) if shape else 1):
+        raise CheckpointError(
+            f"snapshot {d} array {key!r}: shards cover {count} of "
+            f"{full.size} elements (incomplete manifest)")
+    return full
+
+
+def load_run_state_v2(path):
+    """Reassemble a committed v2 snapshot into nested plain structures.
+    Every shard is length- and crc-verified; the reassembled arrays are
+    whole host arrays, so a resuming run re-shards them onto *its* mesh
+    (``load_state_dict`` does the ``device_put``) — a snapshot written on a
+    2x4 mesh restores onto 1x8, 8x1 or a single device unchanged."""
+    d = _stem(path)
+    manifest = read_manifest(d)
+    data = {key: _read_leaf(d, key, ent)
+            for key, ent in manifest["arrays"].items()}
+    return _decode(manifest["tree"], data)
+
+
+# ---------------------------------------------------------------------------
+# snapshot directory scanning / retention
+# ---------------------------------------------------------------------------
+
+_ROUND_RE = re.compile(r"round_(\d+)$")
+
+
+def snapshot_round(path) -> Optional[int]:
+    """Round number encoded in a harness snapshot name, else None."""
+    m = _ROUND_RE.search(_stem(path).name)
+    return int(m.group(1)) if m else None
+
+
+def is_committed(path) -> bool:
+    """Cheap commit probe: a v2 directory with marker + manifest, or a v1
+    npz + sidecar pair. (Deep validation happens at load.)"""
+    stem = _stem(path)
+    if stem.is_dir():
+        return (stem / COMMIT_NAME).exists() and \
+            (stem / MANIFEST_NAME).exists()
+    return _npz_path(stem).exists() and find_sidecar(stem) is not None
+
+
+def _snapshot_stems(checkpoint_dir) -> List[Tuple[Path, int]]:
+    """All ``round_*`` snapshot stems in a checkpoint dir (committed or
+    not), sorted by round."""
+    seen: Dict[Path, int] = {}
+    for p in Path(checkpoint_dir).glob("round_*"):
+        stem = Path(str(p).removesuffix(".meta.json").removesuffix(".npz"))
+        r = snapshot_round(stem)
+        if r is not None:
+            seen[stem] = r
+    return sorted(seen.items(), key=lambda kv: (kv[1], kv[0].name))
+
+
+def committed_snapshots(checkpoint_dir) -> List[Path]:
+    """Stems of all committed snapshots in a dir, oldest round first."""
+    return [s for s, _ in _snapshot_stems(checkpoint_dir)
+            if is_committed(s)]
+
+
+def latest_checkpoint(checkpoint_dir) -> Optional[Path]:
+    """Stem of the newest *committed* snapshot, or None. Uncommitted v2
+    directories (in-flight or crashed writes) are invisible here — this is
+    what the serving path polls."""
+    snaps = committed_snapshots(checkpoint_dir)
+    return snaps[-1] if snaps else None
+
+
+def delete_snapshot(path) -> None:
+    """Remove one snapshot. v2: the commit marker goes first (the snapshot
+    turns invisible atomically), then the directory; v1: npz before
+    sidecar, so a concurrent reader fails loudly instead of decoding a
+    half-deleted pair."""
+    stem = _stem(path)
+    if stem.is_dir():
+        (stem / COMMIT_NAME).unlink(missing_ok=True)
+        shutil.rmtree(stem, ignore_errors=True)
+    else:
+        _npz_path(stem).unlink(missing_ok=True)
+        mp = find_sidecar(stem)
+        if mp is not None:
+            mp.unlink(missing_ok=True)
+
+
+def write_claim(checkpoint_dir, token: str, snapshots) -> Path:
+    """Publish a server's claim file naming the snapshots it is using (the
+    one currently mapped + the one it is about to load): ``prune_checkpoints``
+    never deletes a claimed snapshot. Claim before load, re-verify the
+    commit marker after claiming (a prune that raced the claim is detected
+    and retried by the server)."""
+    d = Path(checkpoint_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    names = sorted({_stem(s).name for s in snapshots if s is not None})
+    p = d / f"{CLAIM_PREFIX}{token}.json"
+    atomic_write(p, lambda t: t.write_text(json.dumps(
+        {"token": token, "snapshots": names})))
+    return p
+
+
+def clear_claim(checkpoint_dir, token: str) -> None:
+    (Path(checkpoint_dir) / f"{CLAIM_PREFIX}{token}.json").unlink(
+        missing_ok=True)
+
+
+def claimed_names(checkpoint_dir) -> set:
+    """Snapshot names named by any live claim file (unparsable claim files
+    are skipped: a torn claim must not wedge retention forever)."""
+    out = set()
+    for p in Path(checkpoint_dir).glob(f"{CLAIM_PREFIX}*.json"):
+        try:
+            doc = json.loads(p.read_text())
+        except (json.JSONDecodeError, OSError):
+            continue
+        out.update(str(n) for n in doc.get("snapshots", []))
+    return out
+
+
+def prune_checkpoints(checkpoint_dir, keep_last: int,
+                      protect=()) -> List[Path]:
+    """Delete all but the newest ``keep_last`` committed snapshots; returns
+    the deleted stems. Never deletes (a) the newest committed snapshot,
+    (b) anything named by a ``SERVING-*`` claim file or ``protect``, or
+    (c) an uncommitted snapshot at/after the newest committed round (that
+    is the writer's in-flight directory). Older uncommitted leftovers
+    (crashed writes) are swept."""
+    if not isinstance(keep_last, int) or keep_last < 1:
+        raise ValueError(f"keep_last must be a positive int, got "
+                         f"{keep_last!r}")
+    d = Path(checkpoint_dir)
+    if not d.is_dir():
+        return []
+    stems = _snapshot_stems(d)
+    committed = [(s, r) for s, r in stems if is_committed(s)]
+    if not committed:
+        return []
+    newest_round = committed[-1][1]
+    keep = {s.name for s, _ in committed[-keep_last:]}
+    keep |= claimed_names(d)
+    keep |= {_stem(p).name for p in protect}
+    removed = []
+    for s, r in stems:
+        if s.name in keep:
+            continue
+        if not is_committed(s) and r >= newest_round:
+            continue
+        delete_snapshot(s)
+        removed.append(s)
+    return removed
+
+
+# ---------------------------------------------------------------------------
+# writers
+# ---------------------------------------------------------------------------
+
+class BlockingCheckpointWriter:
+    """Uniform writer interface over the synchronous v1 save: the
+    ``checkpoint_async=False`` harness path, the perf baseline
+    ``bench_serve.py`` measures the async writer against, and the reason
+    the v1 *write* path stays exercised end-to-end (v1→v2 read-compat)."""
+
+    def __init__(self, keep_last: int = None):
+        self.keep_last = keep_last
+
+    def submit(self, path, state, metadata: dict = None) -> None:
+        save_run_state(path, state, metadata=metadata)
+        if self.keep_last:
+            prune_checkpoints(_stem(path).parent, self.keep_last)
+
+    def drain(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+    def shutdown(self) -> None:
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, et, ev, tb):
+        self.close() if et is None else self.shutdown()
+        return False
+
+
+class AsyncCheckpointWriter:
+    """Background v2 snapshot writer fed through a bounded queue.
+
+    ``submit`` runs on the round loop and only walks the state tree:
+    device arrays are enqueued as references (immutable), host numpy leaves
+    are copied (the harness mutates them in place between rounds). The
+    worker thread pulls per-shard device→host transfers, writes the
+    snapshot directory, commits, and prunes — the round loop never blocks
+    on disk unless the writer falls ``queue_size`` snapshots behind
+    (backpressure beats unbounded memory growth).
+
+    A failed write is re-raised on the *next* ``submit``/``drain``/
+    ``close`` — ``close()`` is the harness's drain barrier at exit, so an
+    experiment cannot return having silently dropped its snapshots.
+    ``shutdown()`` is the ``finally``-safe variant (never raises, never
+    masks the in-flight exception that got there)."""
+
+    def __init__(self, keep_last: int = None, queue_size: int = 2):
+        self.keep_last = keep_last
+        self._q: "queue.Queue" = queue.Queue(maxsize=queue_size)
+        self._err: Optional[BaseException] = None
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._worker, name="ckpt-writer", daemon=True)
+        self._thread.start()
+
+    # -- round-loop side -----------------------------------------------------
+    def submit(self, path, state, metadata: dict = None) -> None:
+        self._raise_pending()
+        if self._closed:
+            raise CheckpointError("submit() on a closed checkpoint writer")
+        arrays: Dict[str, Any] = {}
+        tree = _encode(state, arrays, "s", copy_host=True)
+        self._q.put((_stem(path), tree, arrays, dict(metadata or {})))
+
+    def drain(self) -> None:
+        """Block until every submitted snapshot is committed (or failed)."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Drain barrier: waits for all pending writes, stops the worker,
+        re-raises the first write failure."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(None)
+            self._thread.join()
+        self._raise_pending()
+
+    def shutdown(self) -> None:
+        """``finally``-safe close: same drain, swallows write errors so it
+        never masks an exception already unwinding the harness."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(None)
+            self._thread.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, et, ev, tb):
+        self.close() if et is None else self.shutdown()
+        return False
+
+    # -- worker side ---------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                path, tree, arrays, metadata = item
+                _write_v2(path, tree, arrays, metadata)
+                if self.keep_last:
+                    prune_checkpoints(path.parent, self.keep_last)
+            except BaseException as e:           # surfaced at the barrier
+                if self._err is None:
+                    self._err = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            if isinstance(err, CheckpointError):
+                raise err
+            raise CheckpointError(
+                f"async checkpoint write failed: {err}") from err

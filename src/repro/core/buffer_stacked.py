@@ -310,12 +310,13 @@ class StackedOnlineBuffer:
         capacity/head/size pointers, staged-but-uncommitted arrivals and the
         shift-proxy memory. Everything needed for a mid-stream resume to be
         bit-identical, including wrap-around and over-capacity staging.
-        Mesh-sharded buffers are host-gathered into plain numpy arrays (the
-        RunState npz format is host-gathered for now — ROADMAP: per-shard
-        async checkpointing); ``load_state_dict`` re-shards on restore."""
+        Mesh-sharded tensors are returned as the live device arrays — the
+        checkpoint writer pulls them per addressable shard off the round
+        loop (``checkpoint/streaming.py``), so a sharded buffer never
+        host-gathers; ``load_state_dict`` re-shards on restore."""
         s = self.state
         return {
-            **{k: np.asarray(v) for k, v in s._asdict().items()},
+            **dict(s._asdict()),
             "num_classes": int(self.num_classes),
             "last_hist": self.last_hist,
         }

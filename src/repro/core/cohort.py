@@ -277,7 +277,10 @@ class CohortTables:
 
     # -- checkpointing -------------------------------------------------------
     def state_dict(self) -> dict:
-        return {k: np.asarray(v) for k, v in self._tables.items()}
+        # live device arrays, NamedSharding intact: the v2 checkpoint writer
+        # pulls them per addressable shard (no host gather on the round
+        # loop); load_state_dict re-applies client_sharding on restore
+        return dict(self._tables)
 
     def load_state_dict(self, sd: dict) -> None:
         from repro.checkpoint.run_state import CheckpointError

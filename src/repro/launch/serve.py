@@ -1,84 +1,291 @@
-"""Batched serving driver: prefill + decode loop with the sharded KV cache.
+"""Train-while-serve: hot-reload the latest committed global FL model.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m --reduced \
-      --batch 4 --prompt-len 32 --decode-steps 16
+The paper's deployment is a live wireless video-caching system: clients keep
+training online while the *current* global predictor serves cache-decision
+requests. This module closes that loop against the streaming checkpoint
+layer (``checkpoint/streaming.py``):
+
+  * ``ModelServer`` polls a checkpoint directory, maps the newest
+    **committed** snapshot (uncommitted / torn writes are invisible —
+    ``latest_checkpoint`` requires the commit marker), and swaps the global
+    model in without interrupting in-flight request scoring: ``pin()``
+    returns a handle holding the mapped params by reference, so a reload
+    between two ``score`` calls of one request batch cannot change that
+    batch's outputs (jax arrays are immutable; the swap is a pure rebind).
+  * Staleness is first-class: ``rounds_behind`` (newest committed round
+    minus mapped round) updates on every poll, and each reload logs how far
+    behind the server was the moment it swapped (``stats()["reloads"]``).
+  * The prune-vs-reload race is closed by claim files: before loading, the
+    server publishes ``SERVING-<token>.json`` naming the snapshot it has
+    mapped *and* the one it is about to read; ``prune_checkpoints`` skips
+    claimed names. A prune that raced the claim is caught by re-checking
+    the commit marker after claiming and by the loader's crc/commit
+    validation — the server then just retries on the next poll.
+
+``serve_loop`` drives a synthetic request stream against the server while a
+trainer (another thread or process) writes snapshots — the shape
+``tools/serve_smoke.py`` runs in CI and ``benchmarks/bench_serve.py``
+measures. The transformer decode-path example that previously lived here
+moved to ``examples/serve_decode.py``.
+
+    PYTHONPATH=src python -m repro.launch.serve --checkpoint-dir \\
+        experiments/run1/ckpt --until-round 20
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
+from functools import partial
+from pathlib import Path
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config
-from repro.core.pod import make_serve_step
-from repro.core.shmap import use_mesh
-from repro.launch.mesh import make_host_mesh
-from repro.models.transformer import (decode_step, init_cache, init_model)
-from repro.models.transformer import whisper_encode
-
-
-def run(arch: str, *, reduced=True, batch=4, prompt_len=32, decode_steps=16,
-        cache_len=128, seed=0, verbose=True):
-    cfg = get_config(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    mesh = make_host_mesh()
-    key = jax.random.PRNGKey(seed)
-    params = init_model(key, cfg)
-    memory = None
-    if cfg.encoder is not None:
-        frames = 0.02 * jax.random.normal(
-            key, (batch, cfg.encoder.n_frames, cfg.d_model))
-        memory = whisper_encode(params, frames, cfg)
-        cache_len = min(cache_len, cfg.encoder.max_decoder_len)
-    if cfg.vision is not None:
-        patches = 0.02 * jax.random.normal(
-            key, (batch, cfg.vision.n_patches, cfg.vision.d_vision))
-        memory = patches.astype(jnp.bfloat16) @ params["vision_proj"].astype(
-            jnp.bfloat16)
-
-    cache = init_cache(cfg, batch, cache_len)
-    prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
-    serve = jax.jit(make_serve_step(cfg))
-
-    with use_mesh(mesh):
-        # prefill via sequential decode (cache-exact; a fused prefill kernel
-        # is the production path, exercised by the prefill_32k dry-run)
-        t0 = time.time()
-        tok = prompt[:, :1]
-        for i in range(prompt_len):
-            tok = prompt[:, i:i + 1]
-            nxt, cache = serve(params, cache, tok, jnp.int32(i), memory)
-        prefill_s = time.time() - t0
-        out = []
-        t0 = time.time()
-        tok = nxt
-        for i in range(decode_steps):
-            tok, cache = serve(params, cache, tok,
-                               jnp.int32(prompt_len + i), memory)
-            out.append(tok)
-        decode_s = time.time() - t0
-    tokens = jnp.concatenate(out, axis=1)
-    if verbose:
-        print(f"{cfg.name}: prefill {prompt_len} toks in {prefill_s:.2f}s; "
-              f"decoded {decode_steps} toks in {decode_s:.2f}s "
-              f"({batch * decode_steps / max(decode_s, 1e-9):.1f} tok/s)")
-        print("sampled token ids:", tokens[0][:12].tolist())
-    return tokens
+from repro import checkpoint
+from repro.checkpoint import CheckpointError
+from repro.core.flatten import make_codec
+from repro.data.online import dataset_layout
+from repro.models.small import NUM_CLASSES, REGISTRY, init_small, \
+    small_forward
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="xlstm-350m")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--decode-steps", type=int, default=16)
-    args = ap.parse_args()
-    run(args.arch, reduced=not args.full, batch=args.batch,
-        prompt_len=args.prompt_len, decode_steps=args.decode_steps)
+def extract_global_model(snap: dict):
+    """(model_name, params pytree, next_round) from a loaded RunState
+    snapshot, across every engine's layout: the loop servers store a
+    ``params`` pytree, the stacked/pod servers a flat ``w`` vector
+    (unflattened through the model's codec), and the sparse-cohort server
+    nests its inner width-C server under ``server.inner``."""
+    try:
+        sv = snap["server"]
+        model = str(snap["config"]["model"])
+        rnd = int(snap["next_round"])
+    except (KeyError, TypeError) as e:
+        raise CheckpointError(
+            f"snapshot is not a harness RunState (missing {e})") from e
+    if isinstance(sv, dict) and "inner" in sv:
+        sv = sv["inner"]
+    if model not in REGISTRY:
+        raise CheckpointError(f"snapshot names unknown model {model!r}")
+    if isinstance(sv, dict) and "params" in sv:
+        params = jax.tree.map(jnp.asarray, sv["params"])
+    elif isinstance(sv, dict) and "w" in sv:
+        codec = make_codec(init_small(jax.random.PRNGKey(0), model))
+        params = codec.unflatten(jnp.asarray(sv["w"]))
+    else:
+        raise CheckpointError(
+            "snapshot server state has neither 'params' nor 'w'")
+    return model, params, rnd
+
+
+class ScoringHandle:
+    """An immutable view of one mapped model: ``score`` always runs the
+    params this handle was pinned with, even if the owning ``ModelServer``
+    hot-reloads mid-batch. Pin one per request batch."""
+
+    def __init__(self, fwd, params, round_: int):
+        self._fwd = fwd
+        self._params = params
+        self.round = round_
+
+    def score(self, x) -> np.ndarray:
+        """(B, ...) request features -> (B, NUM_CLASSES) logits."""
+        return np.asarray(self._fwd(self._params, jnp.asarray(x)))
+
+
+class ModelServer:
+    """Hot-reloading model server over a checkpoint directory.
+
+    ``poll()`` is the single state transition: scan for the newest committed
+    snapshot, claim it, load it, swap. Everything else (``pin``/``score``)
+    reads the currently mapped model. Load failures caused by races (the
+    snapshot pruned between scan and read) are counted and retried on the
+    next poll, never fatal; they cannot map a partial model because the
+    loader validates commit marker, manifest sha and per-shard crc before
+    returning anything."""
+
+    def __init__(self, checkpoint_dir, claim: bool = True):
+        self.dir = Path(checkpoint_dir)
+        self._claim = bool(claim)
+        self._token = (f"{os.getpid()}-"
+                       f"{np.random.SeedSequence().entropy % 16**8:08x}")
+        self._fwd = None
+        self._params = None
+        self.model: Optional[str] = None
+        self.mapped: Optional[str] = None     # snapshot name currently mapped
+        self.mapped_round = -1
+        self.rounds_behind = 0
+        self.reloads = 0
+        self.failed_loads = 0
+        self.last_error: Optional[str] = None
+        self._reload_log = []
+
+    # -- polling / hot reload ------------------------------------------------
+    def poll(self) -> bool:
+        """Map the newest committed snapshot if it is newer than the mapped
+        one. Returns True iff a reload happened."""
+        latest = checkpoint.latest_checkpoint(self.dir)
+        if latest is None:
+            return False
+        latest_round = checkpoint.snapshot_round(latest)
+        if latest_round is None:
+            latest_round = self.mapped_round
+        if self.mapped is not None:
+            self.rounds_behind = max(latest_round - self.mapped_round, 0)
+        if latest.name == self.mapped:
+            return False
+        # claim-before-load: name both the mapped snapshot (still serving
+        # in-flight batches) and the target, then re-verify the target is
+        # still committed — a prune that raced the scan loses here
+        if self._claim:
+            checkpoint.write_claim(self.dir, self._token,
+                                   [self.mapped, latest.name])
+        if not checkpoint.is_committed(latest):
+            self._unclaim_target()
+            return False
+        t0 = time.perf_counter()
+        try:
+            snap = checkpoint.load_run_state(latest)
+            model, params, rnd = extract_global_model(snap)
+        except (CheckpointError, FileNotFoundError) as e:
+            # raced a prune or hit a bad artifact: stay on the mapped model
+            self.failed_loads += 1
+            self.last_error = str(e)
+            self._unclaim_target()
+            return False
+        if self._fwd is None or model != self.model:
+            self._fwd = jax.jit(partial(small_forward, name=model))
+        behind = rnd - self.mapped_round if self.mapped is not None else 0
+        # the swap: pure rebind — existing ScoringHandles keep the old params
+        self._params = params
+        self.model = model
+        self.mapped = latest.name
+        self.mapped_round = rnd
+        self.rounds_behind = 0
+        self.reloads += 1
+        self._reload_log.append({"round": rnd, "behind": int(behind),
+                                 "reload_s": time.perf_counter() - t0})
+        if self._claim:
+            checkpoint.write_claim(self.dir, self._token, [self.mapped])
+        return True
+
+    def _unclaim_target(self) -> None:
+        if self._claim:
+            if self.mapped is not None:
+                checkpoint.write_claim(self.dir, self._token, [self.mapped])
+            else:
+                checkpoint.clear_claim(self.dir, self._token)
+
+    # -- scoring -------------------------------------------------------------
+    def pin(self) -> ScoringHandle:
+        """Pin the currently mapped model for one request batch."""
+        if self._params is None:
+            raise RuntimeError(
+                "no model mapped yet — poll() until a committed snapshot "
+                f"appears under {self.dir}")
+        return ScoringHandle(self._fwd, self._params, self.mapped_round)
+
+    def score(self, x) -> np.ndarray:
+        """One-shot scoring on the currently mapped model."""
+        return self.pin().score(x)
+
+    # -- bookkeeping ---------------------------------------------------------
+    def stats(self) -> dict:
+        return {"mapped": self.mapped, "mapped_round": self.mapped_round,
+                "rounds_behind": self.rounds_behind,
+                "reloads": list(self._reload_log),
+                "failed_loads": self.failed_loads,
+                "last_error": self.last_error}
+
+    def close(self) -> None:
+        checkpoint.clear_claim(self.dir, self._token)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, et, ev, tb):
+        self.close()
+        return False
+
+
+def make_request_batch(rng: np.random.Generator, batch: int, dataset: int
+                       ) -> np.ndarray:
+    """Synthetic request features matching the dataset's layout (dataset 1:
+    normalized feature rows; dataset 2: content-id sequences)."""
+    feat_shape, dtype = dataset_layout(dataset)
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        return rng.integers(0, NUM_CLASSES,
+                            (batch,) + feat_shape).astype(dtype)
+    return rng.standard_normal((batch,) + feat_shape).astype(dtype)
+
+
+def serve_loop(checkpoint_dir, *, until_round: int = None,
+               duration_s: float = None, poll_s: float = 0.1,
+               batch: int = 32, dataset: int = 2, seed: int = 0,
+               timeout_s: float = 120.0, verbose: bool = False) -> dict:
+    """Score synthetic request batches against the hot-reloading server
+    until the mapped model reaches ``until_round`` (or ``duration_s``
+    elapses). Each batch is scored on a pinned handle; the server polls
+    between batches. Returns the serving stats plus traffic counters."""
+    rng = np.random.default_rng(seed)
+    deadline = time.monotonic() + (duration_s if duration_s is not None
+                                   else timeout_s)
+    batches = scored = 0
+    mapped_rounds = []
+    with ModelServer(checkpoint_dir) as server:
+        while True:
+            reloaded = server.poll()
+            if reloaded:
+                mapped_rounds.append(server.mapped_round)
+                if verbose:
+                    print(f"serve: mapped round {server.mapped_round} "
+                          f"({server.rounds_behind} behind at swap)")
+            if server.mapped is not None:
+                handle = server.pin()
+                out = handle.score(make_request_batch(rng, batch, dataset))
+                batches += 1
+                scored += out.shape[0]
+            if until_round is not None and \
+                    server.mapped_round >= until_round:
+                break
+            if time.monotonic() >= deadline:
+                if until_round is not None:
+                    raise TimeoutError(
+                        f"serve_loop: model never reached round "
+                        f"{until_round} (mapped {server.mapped_round}) "
+                        f"within {timeout_s}s")
+                break
+            time.sleep(poll_s)
+        stats = server.stats()
+    stats.update(batches=batches, requests_scored=scored,
+                 mapped_rounds=mapped_rounds)
+    return stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Serve the latest committed FL model from a checkpoint "
+        "directory, hot-reloading as training publishes new rounds.")
+    ap.add_argument("--checkpoint-dir", required=True)
+    ap.add_argument("--until-round", type=int, default=None,
+                    help="exit once this round is mapped")
+    ap.add_argument("--duration-s", type=float, default=None,
+                    help="serve for a fixed wall-clock window instead")
+    ap.add_argument("--poll-s", type=float, default=0.1)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--dataset", type=int, default=2, choices=(1, 2))
+    ap.add_argument("--timeout-s", type=float, default=120.0)
+    args = ap.parse_args(argv)
+    stats = serve_loop(args.checkpoint_dir, until_round=args.until_round,
+                       duration_s=args.duration_s, poll_s=args.poll_s,
+                       batch=args.batch, dataset=args.dataset,
+                       timeout_s=args.timeout_s, verbose=True)
+    print(f"served {stats['requests_scored']} requests over "
+          f"{stats['batches']} batches; {len(stats['reloads'])} reloads, "
+          f"final round {stats['mapped_round']}")
+    return stats
 
 
 if __name__ == "__main__":

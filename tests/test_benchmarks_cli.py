@@ -38,7 +38,7 @@ def test_all_entry_points_enumerated():
     # every benchmarks/*.py except the library modules is an entry point; a
     # new script missing its __main__ block would silently drop out of the
     # CLI sweep below, so pin the count
-    assert len(ENTRY_POINTS) == 11
+    assert len(ENTRY_POINTS) == 12
     for p in ENTRY_POINTS:
         text = (ROOT / p).read_text()
         assert "__main__" in text, f"{p} has no __main__ block"

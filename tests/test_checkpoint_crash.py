@@ -1,0 +1,299 @@
+"""Crash/corruption hardening of the streaming (v2) checkpoint layer.
+
+The contract under test (checkpoint/streaming.py): a snapshot is atomically
+either complete or invisible. No writer death — SIGKILL at an arbitrary
+byte offset — and no on-disk corruption may ever produce a snapshot that
+*loads* but holds wrong data; the failure mode is always "invisible to
+``latest_checkpoint``" or "``CheckpointError`` naming the bad artifact",
+never a silent partial restore.
+
+Three attack surfaces:
+
+  * a real writer subprocess SIGKILLed at randomized offsets mid-save
+    (the ``_POST_SHARD_HOOK`` test seam widens the kill window so the
+    signal lands between shard-file writes with high probability);
+  * a deterministic torn write stopped after *every* possible shard-file
+    offset in turn (covers the offsets the randomized kill may miss);
+  * byte-level corruption of every artifact of a committed snapshot —
+    truncated / bit-flipped / missing / cross-save-swapped shard files,
+    garbled manifest, garbled / missing / mismatched commit marker — plus
+    the v1 equivalent (truncated ``.npz``).
+
+This file doubles as the crash child: ``python test_checkpoint_crash.py
+--child DIR`` writes snapshots in a tight loop until killed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+if __name__ == "__main__":      # child mode: repro comes from PYTHONPATH=src
+    sys.path.insert(0, str(ROOT / "src"))
+
+from repro import checkpoint
+from repro.checkpoint import (CheckpointError, committed_snapshots,
+                              diff_snapshots, latest_checkpoint,
+                              load_run_state, save_run_state,
+                              save_run_state_v2, snapshot_round)
+from repro.checkpoint import streaming
+
+
+def _round_state(r: int) -> dict:
+    """Deterministic per-round RunState-shaped tree (seeded by the round
+    number) so the parent can regenerate what the killed child wrote."""
+    rng = np.random.default_rng(1000 + r)
+    return {
+        "config": {"model": "mlp", "dataset": 2},
+        "server": {"w": rng.standard_normal(257).astype(np.float32),
+                   "step": np.array(r, dtype=np.int64)},     # 0-d shard
+        "buffer": {"x": rng.standard_normal((8, 16)).astype(np.float32),
+                   "count": np.array(r % 5, dtype=np.int32),
+
+                   "mask": rng.integers(0, 2, 24).astype(bool),
+                   "ids": rng.integers(-4, 4, 10).astype(np.int8)},
+        "next_round": int(r),
+    }
+
+
+def _child_main(out_dir: str) -> int:
+    """Write committed snapshots round 1, 2, ... until killed. Each shard
+    write is followed by a short sleep (the test seam) so the parent's
+    SIGKILL lands mid-snapshot with high probability."""
+    d = Path(out_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    streaming._POST_SHARD_HOOK = lambda: time.sleep(0.004)
+    (d / "BEGIN").touch()       # imports done: the parent's kill clock starts
+    for r in range(1, 400):
+        save_run_state_v2(d / f"round_{r:05d}", _round_state(r),
+                          metadata={"round": r})
+    return 0
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sigkill_mid_save_commits_are_exact_partials_invisible(
+        tmp_path, seed):
+    """SIGKILL a real writer subprocess at a randomized offset: every
+    snapshot that survived with a commit marker loads bit-exactly to what
+    the child deterministically wrote; everything else is invisible to the
+    scan and refuses to load."""
+    env = {**os.environ, "PYTHONPATH": str(ROOT / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    proc = subprocess.Popen(
+        [sys.executable, str(Path(__file__).resolve()), "--child",
+         str(tmp_path)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    try:
+        # wait until round 1 is committed so every run kills a *mid-stream*
+        # writer (never one that had produced nothing at all)
+        first = tmp_path / "round_00001" / streaming.COMMIT_NAME
+        deadline = time.monotonic() + 120
+        while not first.exists():
+            assert proc.poll() is None, proc.communicate()
+            assert time.monotonic() < deadline, "child never committed"
+            time.sleep(0.005)
+        time.sleep(random.Random(seed).uniform(0.0, 0.35))
+    finally:
+        proc.kill()             # SIGKILL: no atexit, no flush, no cleanup
+        proc.wait(timeout=60)
+
+    snaps = committed_snapshots(tmp_path)
+    assert snaps, "round 1 was committed before the kill"
+    for s in snaps:
+        r = snapshot_round(s)
+        got = load_run_state(s)
+        diffs = diff_snapshots(_round_state(r), got, skip=())
+        assert not diffs, (s, diffs)
+    # uncommitted leftovers (the snapshot the kill interrupted): invisible
+    # to the committed scan, and a direct load refuses loudly
+    latest = latest_checkpoint(tmp_path)
+    assert snapshot_round(latest) == max(snapshot_round(s) for s in snaps)
+    partial = [p for p in tmp_path.glob("round_*") if p.is_dir()
+               and not (p / streaming.COMMIT_NAME).exists()]
+    assert len(partial) <= 1    # the writer has at most one in flight
+    for p in partial:
+        assert p not in snaps
+        with pytest.raises(CheckpointError, match="commit marker"):
+            load_run_state(p)
+
+
+def test_torn_write_at_every_shard_offset_is_invisible(tmp_path, monkeypatch):
+    """Deterministic sweep of the randomized test above: abort the writer
+    after shard file 0, 1, ..., n-1 in turn. At every offset the partial
+    directory has no commit marker, is invisible to ``latest_checkpoint``,
+    and refuses a direct load."""
+    state = _round_state(7)
+    save_run_state_v2(tmp_path / "ref" / "round_00007", state)
+    nshards = len(list((tmp_path / "ref" / "round_00007").glob("*.npy")))
+    assert nshards >= 5         # the sweep actually covers distinct offsets
+    for k in range(nshards):
+        d = tmp_path / f"torn{k:02d}"
+        calls = {"n": 0}
+
+        def hook():
+            calls["n"] += 1
+            if calls["n"] > k:
+                raise KeyboardInterrupt   # die after k+1 shard files
+
+        monkeypatch.setattr(streaming, "_POST_SHARD_HOOK", hook)
+        with pytest.raises(KeyboardInterrupt):
+            save_run_state_v2(d / "round_00001", state)
+        monkeypatch.setattr(streaming, "_POST_SHARD_HOOK", None)
+        assert len(list((d / "round_00001").glob("*.npy"))) == k + 1
+        assert not checkpoint.is_committed(d / "round_00001")
+        assert latest_checkpoint(d) is None
+        assert committed_snapshots(d) == []
+        with pytest.raises(CheckpointError, match="commit marker"):
+            load_run_state(d / "round_00001")
+
+
+# ---------------------------------------------------------------------------
+# byte-level corruption of a committed snapshot
+# ---------------------------------------------------------------------------
+
+def _committed(tmp_path, r=3) -> Path:
+    d = tmp_path / f"round_{r:05d}"
+    save_run_state_v2(d, _round_state(r), metadata={"round": r})
+    return d
+
+
+def _a_shard(d: Path) -> str:
+    """Some multi-byte shard file name, from the manifest."""
+    man = json.loads((d / streaming.MANIFEST_NAME).read_text())
+    for ent in man["arrays"].values():
+        for sh in ent["shards"]:
+            if sh["nbytes"] > 128:
+                return sh["file"]
+    raise AssertionError("no big shard in manifest")
+
+
+def _truncate_shard(d):
+    f = d / _a_shard(d)
+    f.write_bytes(f.read_bytes()[:-7])
+    return f.name, "truncated"
+
+
+def _flip_byte(d):
+    f = d / _a_shard(d)
+    raw = bytearray(f.read_bytes())
+    raw[-3] ^= 0x40             # payload byte: crc fails before np.load
+    f.write_bytes(bytes(raw))
+    return f.name, "crc32"
+
+
+def _delete_shard(d):
+    f = d / _a_shard(d)
+    f.unlink()
+    return f.name, "missing"
+
+
+def _swap_shard_across_saves(d):
+    """Same tree shape, different save: byte lengths match, contents do
+    not — only the crc catches the mix-up."""
+    other = _committed(d.parent / "other", r=4)
+    name = _a_shard(d)
+    (d / name).write_bytes((other / name).read_bytes())
+    return name, "crc32"
+
+
+def _garble_manifest(d):
+    f = d / streaming.MANIFEST_NAME
+    f.write_text(f.read_text()[:-40] + "}")
+    return f.name, "does not hash"
+
+
+def _garble_commit(d):
+    f = d / streaming.COMMIT_NAME
+    f.write_text("{\"format_version\": 2, \"save_")     # torn json
+    return f.name, "corrupt commit marker"
+
+
+def _mismatched_save_id(d):
+    """A commit marker whose sha matches the manifest but that names a
+    different save (a stale marker next to rewritten shards)."""
+    import hashlib
+    f = d / streaming.COMMIT_NAME
+    commit = json.loads(f.read_text())
+    commit["save_id"] = "0" * 32
+    assert commit["manifest_sha256"] == hashlib.sha256(
+        (d / streaming.MANIFEST_NAME).read_bytes()).hexdigest()
+    f.write_text(json.dumps(commit))
+    return Path(d).name, "different saves"   # message names the snapshot
+
+
+@pytest.mark.parametrize("mutate", [
+    _truncate_shard, _flip_byte, _delete_shard, _swap_shard_across_saves,
+    _garble_manifest, _garble_commit, _mismatched_save_id,
+], ids=lambda m: m.__name__.lstrip("_"))
+def test_corrupt_artifact_raises_checkpoint_error_naming_it(
+        tmp_path, mutate):
+    d = _committed(tmp_path)
+    load_run_state(d)           # pristine snapshot loads
+    name, reason = mutate(d)
+    with pytest.raises(CheckpointError) as exc:
+        load_run_state(d)
+    msg = str(exc.value)
+    assert name in msg, (name, msg)
+    assert reason in msg, (reason, msg)
+
+
+def test_missing_commit_marker_is_invisible_not_an_error(tmp_path):
+    """Deleting the marker (the first step of ``delete_snapshot``) makes
+    the snapshot vanish from the scan; only a *direct* load of the stem
+    raises."""
+    d = _committed(tmp_path)
+    (d / streaming.COMMIT_NAME).unlink()
+    assert latest_checkpoint(tmp_path) is None
+    assert committed_snapshots(tmp_path) == []
+    with pytest.raises(CheckpointError, match="commit marker"):
+        load_run_state(d)
+
+
+def test_v1_truncated_npz_raises_checkpoint_error(tmp_path):
+    """The v1 single-archive path gets the same loud failure: a truncated
+    ``.npz`` (killed mid-``os.replace``-free write, torn copy) raises
+    ``CheckpointError`` naming the file instead of numpy's raw zip error."""
+    stem = tmp_path / "round_00002"
+    save_run_state(stem, _round_state(2), metadata={"round": 2})
+    npz = stem.with_suffix(".npz")
+    npz.write_bytes(npz.read_bytes()[:200])
+    with pytest.raises(CheckpointError, match="corrupt or truncated") as exc:
+        load_run_state(stem)
+    assert npz.name in str(exc.value)
+
+
+def test_corrupt_snapshot_never_silently_restores_wrong_data(tmp_path):
+    """The meta-assertion behind the whole suite: whatever we do to the
+    bytes of one shard, the load either raises or returns data bit-equal
+    to the original — sweep a byte-flip across every shard file."""
+    d = _committed(tmp_path, r=5)
+    want = _round_state(5)
+    for f in sorted(d.glob("*.npy")):
+        raw = bytearray(f.read_bytes())
+        for pos in (0, len(raw) // 2, len(raw) - 1):
+            orig = raw[pos]
+            raw[pos] ^= 0xFF
+            f.write_bytes(bytes(raw))
+            try:
+                got = load_run_state(d)
+            except CheckpointError:
+                pass            # loud failure: the acceptable outcome
+            else:
+                assert not diff_snapshots(want, got, skip=()), (f.name, pos)
+            raw[pos] = orig
+        f.write_bytes(bytes(raw))
+    assert not diff_snapshots(want, load_run_state(d), skip=())
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 3 and sys.argv[1] == "--child":
+        sys.exit(_child_main(sys.argv[2]))
+    sys.exit(2)

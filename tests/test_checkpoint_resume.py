@@ -540,8 +540,12 @@ def test_resume_accepts_snapshot_predating_new_config_fields(tmp_path):
     it behaved like the default, so resume must treat it as the default
     instead of refusing every pre-existing checkpoint."""
     xc = _cfg(2, num_clients=4)
+    # checkpoint_async=False: this test edits the v1 sidecar in place, so it
+    # needs the blocking v1 writer (and doubles as harness-level coverage of
+    # the v1 write path now that the default is the streaming v2 writer)
     run_vectorized_experiment("osafl", xc, eval_samples=16,
-                              save_every_k=1, checkpoint_dir=tmp_path)
+                              save_every_k=1, checkpoint_dir=tmp_path,
+                              checkpoint_async=False)
     ck = checkpoint_path(tmp_path, 1)
     mp = checkpoint.meta_path(ck)
     meta = json.loads(mp.read_text())

@@ -1,0 +1,268 @@
+"""Property tests for the streaming (v2) per-shard snapshot codec.
+
+Invariants (checkpoint/streaming.py), driven by generated adversarial
+trees (tests/_hyp.py shim — real hypothesis when installed):
+
+  * v2 round-trips arbitrary state trees bit-exactly — zero-length arrays,
+    0-d arrays, mixed dtypes (bool / int8 / uint32 / float16), deeply
+    nested dict/list skeletons, python scalars, big ints, None;
+  * v1 and v2 are *interchangeable encodings*: the same state saved both
+    ways loads to identical trees, and ``load_run_state`` dispatches on
+    the on-disk layout (directory -> v2, ``.npz`` -> v1) so every v1
+    snapshot written before this layer keeps loading (read-compat);
+  * wrap-around FIFO pointer states of the stacked buffer (heads past the
+    capacity boundary, staged-but-uncommitted tails) survive v2 and
+    restore into a live buffer in exact lockstep;
+  * a snapshot written from a mesh-sharded array on a faked 8-device
+    (2, 4) mesh really lands as 8 shard files and reassembles bit-exactly
+    in a single-device reader (1-shard vs 8-shard mesh topologies);
+  * ``keep_last`` retention keeps the newest k committed snapshots, never
+    a claimed one, never the writer's in-flight directory, and sweeps
+    crashed leftovers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.checkpoint import (committed_snapshots, diff_snapshots,
+                              latest_checkpoint, load_run_state,
+                              prune_checkpoints, save_run_state,
+                              save_run_state_v2, write_claim, clear_claim)
+from repro.checkpoint import streaming
+from repro.core.buffer_stacked import StackedOnlineBuffer
+
+from _hyp import given, settings, st
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_DTYPES = (np.float32, np.float64, np.float16, np.int64, np.int32,
+           np.int8, np.uint32, np.bool_)
+_SHAPES = ((), (0,), (1,), (5,), (3, 4), (2, 0, 3))
+
+
+def _rand_leaf(rng):
+    roll = rng.random()
+    if roll < 0.65:
+        dtype = _DTYPES[rng.integers(len(_DTYPES))]
+        shape = _SHAPES[rng.integers(len(_SHAPES))]
+        raw = rng.integers(0, 2, shape) if dtype is np.bool_ else \
+            rng.integers(-7, 120, shape)
+        return raw.astype(dtype)
+    if roll < 0.8:
+        return [None, "osafl", int(rng.integers(100)),
+                float(rng.random()), True, 2 ** 97 + 13][
+                    rng.integers(6)]
+    return None
+
+
+def _rand_tree(rng, depth=0):
+    out = {}
+    for i in range(int(rng.integers(2, 6))):
+        key = f"k{i}"
+        if depth < 2 and rng.random() < 0.3:
+            out[key] = _rand_tree(rng, depth + 1) if rng.random() < 0.6 \
+                else [_rand_leaf(rng) for _ in range(int(rng.integers(3)))]
+        else:
+            out[key] = _rand_leaf(rng)
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_v2_roundtrip_adversarial_trees(seed):
+    """save_run_state_v2 -> load_run_state is the identity on arbitrary
+    trees (arrays bit-exact with dtype and shape, skeleton unchanged) —
+    and loads through the same generic entry point as v1 (dispatch on the
+    directory layout)."""
+    import tempfile
+    state = _rand_tree(np.random.default_rng(seed))
+    with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as td:
+        save_run_state_v2(Path(td) / "round_00001", state,
+                          metadata={"seed": seed})
+        out = load_run_state(Path(td) / "round_00001")
+    diffs = diff_snapshots(state, out, skip=())
+    assert not diffs, diffs
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_v1_and_v2_load_to_identical_trees(seed):
+    """The two layouts are interchangeable encodings of one tree: the same
+    state saved as a v1 npz+sidecar pair and as a v2 shard directory loads
+    to identical results (v1 write stays the read-compat anchor)."""
+    import tempfile
+    state = _rand_tree(np.random.default_rng(seed))
+    with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as td:
+        save_run_state(Path(td) / "v1" / "round_00001", state)
+        save_run_state_v2(Path(td) / "v2" / "round_00001", state)
+        from_v1 = load_run_state(Path(td) / "v1" / "round_00001")
+        from_v2 = load_run_state(Path(td) / "v2" / "round_00001")
+        # both committed, both visible to the shared scan
+        assert latest_checkpoint(Path(td) / "v1") is not None
+        assert latest_checkpoint(Path(td) / "v2") is not None
+    diffs = diff_snapshots(from_v1, from_v2, skip=())
+    assert not diffs, diffs
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 9), st.lists(st.integers(0, 12), min_size=1,
+                                   max_size=6), st.integers(0, 6))
+def test_v2_roundtrip_fifo_wraparound_buffer_states(cap, bursts, tail):
+    """Wrap-around FIFO pointer states — heads past the capacity boundary,
+    over-capacity commits, a staged-but-uncommitted tail — survive the
+    per-shard layout and restore into a fresh buffer bit-exactly."""
+    import tempfile
+    C = 7
+    caps = np.array([cap, max(cap - 1, 2)])
+    sbuf = StackedOnlineBuffer.create(caps, (2,), C, stage_capacity=14)
+    counter = 0
+    for n in bursts:                       # enough traffic to wrap the FIFO
+        counts = (n, (2 * n + 1) % 13)
+        A = int(max(max(counts), 1))
+        xs = np.zeros((2, A, 2), np.float32)
+        ys = np.zeros((2, A), np.int64)
+        for u, cnt in enumerate(counts):
+            xs[u, :cnt, 0] = np.arange(counter, counter + cnt)
+            ys[u, :cnt] = np.arange(counter, counter + cnt) % C
+            counter += cnt
+        sbuf.stage(xs, ys, np.asarray(counts))
+        sbuf.commit()
+    if tail:                               # uncommitted staging area
+        xs = np.zeros((2, tail, 2), np.float32)
+        xs[:, :, 0] = counter
+        sbuf.stage(xs, np.zeros((2, tail), np.int64),
+                   np.asarray((tail, tail // 2)))
+    with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as td:
+        save_run_state_v2(Path(td) / "round_00001",
+                          {"buffer": sbuf.state_dict()})
+        loaded = load_run_state(Path(td) / "round_00001")
+    sbuf2 = StackedOnlineBuffer.create(caps, (2,), C, stage_capacity=14)
+    sbuf2.load_state_dict(loaded["buffer"])
+    diffs = diff_snapshots(sbuf.state_dict(), sbuf2.state_dict(), skip=())
+    assert not diffs, diffs
+    # restored copy continues in lockstep: committing the staged tail on
+    # both sides yields identical datasets
+    sbuf.commit()
+    sbuf2.commit()
+    for u in range(2):
+        ax, ay = sbuf.dataset(u)
+        bx, by = sbuf2.dataset(u)
+        assert np.array_equal(ax, bx) and np.array_equal(ay, by)
+
+
+_MESH_CHILD = textwrap.dedent("""
+    import os, sys
+    sys.path.insert(0, sys.argv[2])
+    import numpy as np
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import save_run_state_v2
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    x = np.arange(8 * 16, dtype=np.float32).reshape(8, 16)
+    xd = jax.device_put(x, NamedSharding(mesh, P("pod", "data")))
+    assert len(xd.addressable_shards) == 8
+    save_run_state_v2(sys.argv[1] + "/round_00003",
+                      {"buffer": {"x": xd},
+                       "rep": jax.device_put(
+                           np.arange(6, dtype=np.int64),
+                           NamedSharding(mesh, P()))})
+    print("OK")
+""")
+
+
+def test_v2_mesh_sharded_write_reassembles_on_single_device(tmp_path):
+    """A snapshot written from a NamedSharding-split array on a faked
+    (2, 4) 8-device mesh lands as 8 per-shard files (no host gather: the
+    manifest records 8 distinct index extents), a fully replicated array
+    dedupes to one shard, and this 1-device process reassembles both
+    bit-exactly — re-sharding onto a different topology is the loader's
+    ``device_put`` downstream."""
+    env = {**os.environ, "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_CHILD, str(tmp_path),
+         str(ROOT / "src")],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    d = tmp_path / "round_00003"
+    man = json.loads((d / streaming.MANIFEST_NAME).read_text())
+    shard_counts = {k: len(e["shards"]) for k, e in man["arrays"].items()}
+    assert shard_counts["s/buffer/x"] == 8, shard_counts
+    assert shard_counts["s/rep"] == 1, shard_counts   # replicated dedupes
+    out = load_run_state(d)
+    np.testing.assert_array_equal(
+        out["buffer"]["x"],
+        np.arange(8 * 16, dtype=np.float32).reshape(8, 16))
+    assert out["buffer"]["x"].dtype == np.float32
+    np.testing.assert_array_equal(out["rep"], np.arange(6, dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# keep_last retention
+# ---------------------------------------------------------------------------
+
+def _snap(d: Path, r: int) -> Path:
+    p = d / f"round_{r:05d}"
+    save_run_state_v2(p, {"r": np.array(r)}, metadata={"round": r})
+    return p
+
+
+def test_prune_keeps_newest_k_committed(tmp_path):
+    for r in range(1, 6):
+        _snap(tmp_path, r)
+    removed = prune_checkpoints(tmp_path, keep_last=2)
+    assert sorted(p.name for p in removed) == [
+        "round_00001", "round_00002", "round_00003"]
+    assert [p.name for p in committed_snapshots(tmp_path)] == [
+        "round_00004", "round_00005"]
+    # idempotent: a second prune removes nothing
+    assert prune_checkpoints(tmp_path, keep_last=2) == []
+    with pytest.raises(ValueError):
+        prune_checkpoints(tmp_path, keep_last=0)
+
+
+def test_prune_never_deletes_claimed_snapshot(tmp_path):
+    """The prune-vs-reload race, retention side: a snapshot named by a
+    live ``SERVING-*`` claim survives any ``keep_last``; once the claim
+    moves on, the next prune collects it."""
+    snaps = [_snap(tmp_path, r) for r in range(1, 5)]
+    write_claim(tmp_path, "srv1", [snaps[1]])        # server maps round 2
+    prune_checkpoints(tmp_path, keep_last=1)
+    names = [p.name for p in committed_snapshots(tmp_path)]
+    assert names == ["round_00002", "round_00004"]   # claimed + newest
+    assert load_run_state(snaps[1])["r"] == 2        # still fully loadable
+    # the server re-polls to the newest snapshot; its claim narrows
+    write_claim(tmp_path, "srv1", [snaps[3]])
+    prune_checkpoints(tmp_path, keep_last=1)
+    assert [p.name for p in committed_snapshots(tmp_path)] == [
+        "round_00004"]
+    clear_claim(tmp_path, "srv1")
+    assert not list(tmp_path.glob("SERVING-*"))
+
+
+def test_prune_spares_in_flight_write_sweeps_crashed_leftovers(tmp_path):
+    """An uncommitted directory at/after the newest committed round is the
+    async writer's in-flight snapshot (spared); an uncommitted directory
+    *behind* it is a crashed write (swept)."""
+    for r in (3, 4):
+        _snap(tmp_path, r)
+    stale = tmp_path / "round_00001"                 # crashed leftover
+    stale.mkdir()
+    (stale / "a00000.s00.npy").write_bytes(b"partial")
+    inflight = tmp_path / "round_00005"              # being written now
+    inflight.mkdir()
+    (inflight / "a00000.s00.npy").write_bytes(b"partial")
+    prune_checkpoints(tmp_path, keep_last=1)
+    left = sorted(p.name for p in tmp_path.glob("round_*"))
+    assert left == ["round_00004", "round_00005"]
+    assert latest_checkpoint(tmp_path).name == "round_00004"

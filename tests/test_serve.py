@@ -1,0 +1,192 @@
+"""Train-while-serve hot-reload (launch/serve.py) against the streaming
+checkpoint layer.
+
+The serving contract:
+
+  * only *committed* snapshots are ever mapped — an uncommitted (in-flight
+    or crashed) v2 directory newer than the mapped round is invisible;
+  * staleness is honest and monotone: the mapped round never goes
+    backwards, ``rounds_behind`` reflects the newest committed round, and
+    each reload logs how far behind the server swapped;
+  * a hot reload mid-request-batch cannot change in-flight outputs:
+    ``pin()`` holds the mapped params by reference across the swap;
+  * load failures (raced prunes, bad artifacts) are counted and retried,
+    never fatal, never a partial map;
+  * the full loop: a trainer subprocess publishes snapshots every round
+    while a ``serve_loop`` in this process polls, scores and hot-reloads
+    to the final round.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointError, save_run_state_v2,
+                              prune_checkpoints)
+from repro.checkpoint import streaming
+from repro.core.flatten import make_codec
+from repro.launch.serve import (ModelServer, extract_global_model,
+                                make_request_batch, serve_loop)
+from repro.models.small import init_small
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_CODEC = make_codec(init_small(jax.random.PRNGKey(0), "mlp"))
+
+
+def _snap(d: Path, r: int, scale: float = 1.0) -> Path:
+    """A committed RunState-shaped snapshot whose flat weights are
+    deterministic in (round, scale) — distinguishable across rounds."""
+    w = scale * (r + 1) * np.asarray(
+        _CODEC.flatten(init_small(jax.random.PRNGKey(1), "mlp")))
+    p = d / f"round_{r:05d}"
+    save_run_state_v2(p, {"config": {"model": "mlp", "dataset": 2},
+                          "server": {"w": w.astype(np.float32)},
+                          "next_round": r})
+    return p
+
+
+def test_extract_global_model_layouts(tmp_path):
+    """All three engine layouts produce a scorable model: flat ``w``
+    (stacked/pod), a ``params`` pytree (loop), and the sparse-cohort
+    ``inner`` nesting; non-RunState trees are loud failures."""
+    params = init_small(jax.random.PRNGKey(3), "mlp")
+    w = np.asarray(_CODEC.flatten(params))
+    base = {"config": {"model": "mlp"}, "next_round": 4}
+    for sv in ({"w": w}, {"params": params},
+               {"inner": {"w": w}, "slots": np.arange(3)}):
+        model, got, rnd = extract_global_model({**base, "server": sv})
+        assert model == "mlp" and rnd == 4
+        np.testing.assert_allclose(np.asarray(_CODEC.flatten(got)), w,
+                                   rtol=0, atol=0)
+    with pytest.raises(CheckpointError, match="neither"):
+        extract_global_model({**base, "server": {"weights": w}})
+    with pytest.raises(CheckpointError, match="RunState"):
+        extract_global_model({"x": 1})
+    with pytest.raises(CheckpointError, match="unknown model"):
+        extract_global_model({**base, "config": {"model": "nope"},
+                              "server": {"w": w}})
+
+
+def test_server_maps_only_committed_snapshots(tmp_path):
+    _snap(tmp_path, 1)
+    # a *newer* but uncommitted directory: in-flight write or crash debris
+    partial = tmp_path / "round_00002"
+    partial.mkdir()
+    (partial / "a00000.s00.npy").write_bytes(b"garbage")
+    with ModelServer(tmp_path) as server:
+        assert server.poll()
+        assert server.mapped_round == 1
+        assert not server.poll()          # the partial does not exist to it
+        assert server.mapped_round == 1 and server.failed_loads == 0
+        # the write completes (committed) -> next poll maps it
+        _snap(tmp_path, 2)
+        assert server.poll()
+        assert server.mapped_round == 2
+    assert not list(tmp_path.glob("SERVING-*"))   # close() drops the claim
+
+
+def test_staleness_monotone_and_logged(tmp_path):
+    for r in (1, 2, 3):
+        _snap(tmp_path, r)
+    with ModelServer(tmp_path) as server:
+        server.poll()                     # jumps straight to the newest
+        assert server.mapped_round == 3 and server.rounds_behind == 0
+        for r in (4, 5):
+            _snap(tmp_path, r)
+        server.poll()
+        assert server.mapped_round == 5
+        log = server.stats()["reloads"]
+        assert [e["round"] for e in log] == [3, 5]   # never went backwards
+        assert log[0]["behind"] == 0      # first map: nothing was behind
+        assert log[1]["behind"] == 2      # was at 3 when 5 appeared
+
+
+def test_hot_reload_does_not_change_inflight_outputs(tmp_path):
+    """The tentpole serving invariant: a handle pinned before a reload
+    keeps scoring with the old params bit-exactly; only newly pinned
+    handles (and ``server.score``) see the new model."""
+    _snap(tmp_path, 1, scale=1.0)
+    rng = np.random.default_rng(0)
+    x = make_request_batch(rng, 8, 2)
+    with ModelServer(tmp_path) as server:
+        server.poll()
+        handle = server.pin()
+        before = handle.score(x)
+        _snap(tmp_path, 2, scale=-3.0)    # very different weights
+        assert server.poll()              # hot swap while `handle` is live
+        after_inflight = handle.score(x)
+        after_server = server.score(x)
+    np.testing.assert_array_equal(before, after_inflight)
+    assert handle.round == 1
+    assert not np.array_equal(before, after_server)
+
+
+def test_prune_vs_reload_race_is_closed_by_claims(tmp_path):
+    """Retention running next to a live server: the claim pins the mapped
+    snapshot through a ``keep_last=1`` prune, the server keeps serving
+    from it, and after it re-polls to the newest the next prune collects
+    the old one."""
+    _snap(tmp_path, 1)
+    with ModelServer(tmp_path) as server:
+        server.poll()
+        for r in (2, 3):
+            _snap(tmp_path, r)
+        prune_checkpoints(tmp_path, keep_last=1)
+        # mapped snapshot survived the prune (claimed), still scorable
+        assert (tmp_path / "round_00001" / streaming.COMMIT_NAME).exists()
+        server.score(make_request_batch(np.random.default_rng(0), 4, 2))
+        assert server.poll()
+        assert server.mapped_round == 3 and server.failed_loads == 0
+        prune_checkpoints(tmp_path, keep_last=1)
+        assert not (tmp_path / "round_00001").exists()
+        assert (tmp_path / "round_00003" / streaming.COMMIT_NAME).exists()
+
+
+def test_poll_on_empty_and_pin_before_map(tmp_path):
+    with ModelServer(tmp_path / "nothing") as server:
+        assert not server.poll()
+        with pytest.raises(RuntimeError, match="no model mapped"):
+            server.pin()
+
+
+_TRAINER = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, sys.argv[2])
+    sys.path.insert(0, sys.argv[3])
+    from benchmarks.common import ExperimentConfig, run_vectorized_experiment
+    xc = ExperimentConfig(model="mlp", dataset=2, num_clients=8, rounds=3,
+                          capacity=(12, 24), arrivals=4, batch=8, seed=5)
+    run_vectorized_experiment("osafl", xc, eval_samples=32,
+                              save_every_k=1, checkpoint_dir=sys.argv[1])
+""")
+
+
+def test_serve_loop_follows_live_trainer_subprocess(tmp_path):
+    """End-to-end: a real trainer subprocess publishes async-v2 snapshots
+    every round while this process serves — the loop maps committed
+    snapshots only, reaches the final round, and never fails a load."""
+    env = {**os.environ, "JAX_PLATFORMS": "cpu"}
+    env.pop("PYTHONPATH", None)
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _TRAINER, str(tmp_path / "ckpt"),
+         str(ROOT / "src"), str(ROOT)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    try:
+        stats = serve_loop(tmp_path / "ckpt", until_round=3, poll_s=0.05,
+                           batch=8, dataset=2, timeout_s=600.0)
+    finally:
+        out, err = proc.communicate(timeout=600)
+    assert proc.returncode == 0, err
+    assert stats["mapped_round"] == 3
+    assert stats["failed_loads"] == 0, stats["last_error"]
+    assert stats["mapped_rounds"] == sorted(set(stats["mapped_rounds"]))
+    assert stats["batches"] > 0 and stats["requests_scored"] > 0

@@ -1,0 +1,130 @@
+"""CI train-while-serve smoke: 3 online pod rounds on a faked 2x4 mesh with
+a live hot-reloading model server polling the checkpoint directory.
+
+The trainer (``run_pod_online_experiment``, OSAFL, mesh-sharded FIFO buffer)
+runs in a background thread publishing a streaming-v2 snapshot every round
+with ``keep_last=2`` retention; the foreground ``serve_loop`` polls, maps
+only committed snapshots, scores synthetic request batches on pinned
+handles, and exits once round 3 is mapped. Fails (exit 1) on:
+
+  * the server ever failing a load (claims make prune-vs-reload safe),
+  * mapped rounds not strictly increasing (staleness must be monotone),
+  * the final mapped round != the trainer's last round,
+  * zero request batches served, or non-finite logits on the final batch.
+
+Writes a JSON summary next to the bench_serve artifact (CI uploads both).
+
+Usage: PYTHONPATH=src python tools/serve_smoke.py [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import threading
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import (ExperimentConfig,  # noqa: E402
+                               run_pod_online_experiment)
+from repro.launch.serve import make_request_batch, serve_loop  # noqa: E402
+
+ROUNDS = 3
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=Path, default=None,
+                    help="directory for the JSON summary artifact")
+    args = ap.parse_args()
+
+    if jax.device_count() < 8:
+        print(f"serve smoke FAILED: needs 8 faked CPU devices, got "
+              f"{jax.device_count()} (XLA_FLAGS not applied before jax "
+              "import?)")
+        return 1
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    xc = ExperimentConfig(model="mlp", dataset=2, num_clients=8,
+                          rounds=ROUNDS, capacity=(12, 24), arrivals=4,
+                          batch=8, seed=11)
+    failures = []
+    with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as td:
+        ckpt_dir = Path(td) / "ckpt"
+        train_err = []
+
+        def train():
+            try:
+                run_pod_online_experiment(
+                    "osafl", xc, eval_samples=32, mesh=mesh,
+                    save_every_k=1, checkpoint_dir=ckpt_dir, keep_last=2)
+            except BaseException as e:          # surfaced after join
+                train_err.append(e)
+
+        trainer = threading.Thread(target=train, name="trainer")
+        trainer.start()
+        try:
+            stats = serve_loop(ckpt_dir, until_round=ROUNDS, poll_s=0.05,
+                               batch=16, dataset=xc.dataset,
+                               timeout_s=600.0, verbose=True)
+        finally:
+            trainer.join(timeout=600.0)
+        if train_err:
+            raise train_err[0]
+
+        rounds_seen = stats["mapped_rounds"]
+        if stats["failed_loads"]:
+            failures.append(f"server failed {stats['failed_loads']} loads "
+                            f"(last: {stats['last_error']})")
+        if rounds_seen != sorted(set(rounds_seen)):
+            failures.append(f"mapped rounds not strictly increasing: "
+                            f"{rounds_seen}")
+        if stats["mapped_round"] != ROUNDS:
+            failures.append(f"final mapped round {stats['mapped_round']} "
+                            f"!= {ROUNDS}")
+        if not stats["batches"]:
+            failures.append("no request batches served")
+        if any(r["behind"] < 0 for r in stats["reloads"]):
+            failures.append(f"negative staleness: {stats['reloads']}")
+
+        # the final mapped model must actually score: finite logits, right
+        # width (trained on dataset 2 -> 100-class content ids)
+        from repro.launch.serve import ModelServer
+        with ModelServer(ckpt_dir) as server:
+            server.poll()
+            logits = server.score(make_request_batch(
+                np.random.default_rng(0), 16, xc.dataset))
+        if logits.shape[0] != 16 or not np.isfinite(logits).all():
+            failures.append(f"bad logits from the final model: "
+                            f"shape {logits.shape}")
+
+        if args.out:
+            args.out.mkdir(parents=True, exist_ok=True)
+            doc = {"schema": "serve_smoke/v1", "rounds": ROUNDS,
+                   "mesh": {"pod": 2, "data": 4}, "stats": stats,
+                   "failures": failures}
+            (args.out / "serve_smoke.json").write_text(
+                json.dumps(doc, indent=2))
+
+    for f in failures:
+        print("serve smoke FAILURE:", f)
+    if failures:
+        print("serve smoke FAILED")
+        return 1
+    print(f"serve smoke OK: {len(stats['reloads'])} hot reloads to round "
+          f"{stats['mapped_round']}, {stats['requests_scored']} requests "
+          "scored, staleness monotone, no failed loads")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
