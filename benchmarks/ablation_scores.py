@@ -16,7 +16,7 @@ if __package__ in (None, ""):    # executed as a script: python benchmarks/...
 
 import numpy as np
 
-from benchmarks.common import ExperimentConfig, run_experiment
+from repro.harness import ExperimentConfig
 from repro.configs.base import FLConfig
 
 
@@ -57,7 +57,7 @@ def run(rounds=15, num_clients=8, seed=0):
 def _run_variant(xc, fl_overrides):
     import jax
     import jax.numpy as jnp
-    from benchmarks.common import _draw, MODEL_PARAMS
+    from repro.harness.experiments import MODEL_PARAMS, _draw
     from repro.core.baselines import make_server
     from repro.core.buffer import OnlineBuffer, binomial_arrivals
     from repro.core.client import local_train

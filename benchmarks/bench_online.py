@@ -17,8 +17,8 @@ Three measurements:
     Gumbel-trick sampler (``data/video_caching_stacked.py``). This was the
     last O(U) Python loop in the online harness. Acceptance target: >= 10x
     at U = 256.
-  * full harness: end-to-end ``run_experiment`` vs
-    ``run_vectorized_experiment`` steady-state round time, from the
+  * full harness: end-to-end ``repro.harness.run`` round time, loop engine
+    vs stacked engine, from the
     in-harness ``round_s`` history field with the first (compile-bearing)
     round dropped; the vectorized harness is run once per request backend
     and its per-round ``request_gen_s`` field is reported as a column.
@@ -56,7 +56,10 @@ counts, the 10x pipeline / 10x request-gen acceptance bars, a >= 4x
 end-to-end harness-round bar (the measured steady state is ~7-9x; the
 slack absorbs noisy shared runners), the >= 1x fused no-regression bar at
 U = 256 and the >= 2x fused overhead-elimination bar at U = 16 (all at
-k=8 rounds/dispatch), plus the >= 5x sparse-cohort bar at U = 4096.
+k=8 rounds/dispatch), the >= 5x sparse-cohort bar at U = 4096, plus the
+<= 3x two-tier hierarchical-aggregation cost bar at U = 256, K = 8
+(``bench_hier``: the K-cluster round vs the flat scored round on a fixed
+update matrix).
 ``--json`` writes the measurement dicts to a file — CI uploads it as a
 per-PR workflow artifact so the speedups are tracked, not just gated.
 """
@@ -79,8 +82,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (ExperimentConfig, build_fused_engine,
-                               run_experiment, run_vectorized_experiment)
+from repro import harness
+from repro.harness import ExperimentConfig, build_fused_engine
 
 from repro.configs.base import FLConfig
 from repro.core.buffer import OnlineBuffer, binomial_arrivals
@@ -207,11 +210,13 @@ def bench_harness(U: int = 256, rounds: int = 3, model: str = "mlp",
     per-round ``request_gen_s`` field becomes the request_gen_s columns."""
     xc = ExperimentConfig(model=model, dataset=dataset, num_clients=U,
                           rounds=1 + rounds, seed=seed)
-    hv = run_vectorized_experiment("osafl", xc)[1:]
-    hs = run_vectorized_experiment(
+    hv = harness.run("osafl", xc)[1:]
+    hs = harness.run(
         "osafl", dataclasses.replace(xc, request_backend="stacked"))[1:]
-    t_loop = float(np.mean([h["round_s"] for h in
-                            run_experiment("osafl", xc)[1:]]))
+    t_loop = float(np.mean(
+        [h["round_s"] for h in
+         harness.run("osafl",
+                     dataclasses.replace(xc, engine="loop"))[1:]]))
     t_vec = float(np.mean([h["round_s"] for h in hv]))
     t_vec_st = float(np.mean([h["round_s"] for h in hs]))
     return {"U": U, "rounds": rounds, "model": model, "loop_s": t_loop,
@@ -240,7 +245,7 @@ def bench_fused(U: int = 256, rounds: int = 2, rounds_per_dispatch: int = 8,
                           rounds=1 + rounds, seed=seed,
                           request_backend="stacked")
     if dispatch_s is None:
-        hd = run_vectorized_experiment("osafl", xc)[1:]
+        hd = harness.run("osafl", xc)[1:]
         dispatch_s = float(np.mean([h["round_s"] for h in hd]))
     fxc = dataclasses.replace(xc, round_backend="fused",
                               resource_backend="f32",
@@ -280,8 +285,8 @@ def bench_sparse(U: int = 4096, C: int = 64, rounds: int = 2,
     xc = ExperimentConfig(model=model, dataset=dataset, num_clients=U,
                           rounds=1 + rounds, capacity=(12, 24), arrivals=4,
                           batch=8, seed=seed, request_backend="stacked")
-    hd = run_vectorized_experiment("osafl", xc, eval_samples=64)[1:]
-    hs = run_vectorized_experiment(
+    hd = harness.run("osafl", xc, eval_samples=64)[1:]
+    hs = harness.run(
         "osafl", dataclasses.replace(xc, cohort_size=C),
         eval_samples=64)[1:]
     dense_s = float(np.mean([h["round_s"] for h in hd]))
@@ -289,6 +294,40 @@ def bench_sparse(U: int = 4096, C: int = 64, rounds: int = 2,
     return {"U": U, "C": C, "rounds": rounds, "model": model,
             "dense_s": dense_s, "sparse_s": sparse_s,
             "speedup": dense_s / sparse_s}
+
+
+def bench_hier(U: int = 256, K: int = 8, rounds: int = 5,
+               seed: int = 0) -> dict:
+    """Two-tier hierarchical aggregation (``core/hierarchy.py``, K edge
+    clusters + PS combine with cluster-level scores) vs the flat scored
+    round, server-side on a fixed update matrix at U = 256. The two-tier
+    round runs the same O(U·N) scored reduction (in K blocks) plus an
+    O(K·N) second stage, so its cost must stay within a small constant of
+    the flat round — the gate guards against the per-block unroll
+    regressing to K full-width passes. Acceptance (``--smoke``): hier
+    <= 3x flat."""
+    from repro.core.osafl import StackedOSAFLServer
+    from repro.core.hierarchy import HierStackedOSAFLServer
+    params = init_small(jax.random.PRNGKey(seed), "mlp")
+    fl = FLConfig(num_clients=U, local_lr=0.1, global_lr=16.0)
+    flat = StackedOSAFLServer(params, fl, U)
+    hier = HierStackedOSAFLServer(
+        params, dataclasses.replace(fl, num_clusters=K), U)
+    d_new = jnp.asarray(np.random.default_rng(seed).normal(
+        size=(U, flat.codec.n)).astype(np.float32))
+    active = np.ones(U, bool)
+    for srv in (flat, hier):                       # warm compile
+        srv.round_stacked(d_new, active)
+        jax.block_until_ready(srv.w)
+    ts = {}
+    for name, srv in (("flat", flat), ("hier", hier)):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            srv.round_stacked(d_new, active)
+            jax.block_until_ready(srv.w)
+        ts[name] = (time.perf_counter() - t0) / rounds
+    return {"U": U, "K": K, "rounds": rounds, "flat_s": ts["flat"],
+            "hier_s": ts["hier"], "ratio": ts["hier"] / ts["flat"]}
 
 
 def main() -> None:
@@ -343,10 +382,15 @@ def main() -> None:
     print(f"U={sp['U']} sparse cohort (C={sp['C']} slots): dense "
           f"{sp['dense_s']*1e3:.0f} ms vs sparse {sp['sparse_s']*1e3:.0f} ms "
           f"per round -> {sp['speedup']:.1f}x")
+    hr = bench_hier(U, rounds=max(rounds, 5))
+    print(f"U={hr['U']} two-tier aggregation (K={hr['K']} clusters): flat "
+          f"{hr['flat_s']*1e3:.1f} ms vs hier {hr['hier_s']*1e3:.1f} ms "
+          f"per round -> {hr['ratio']:.2f}x the flat cost")
     if args.json:
         Path(args.json).write_text(json.dumps(
             {"pipeline": p, "request_gen": g, "harness": h, "fused": f,
-             "fused_small": fs, "sparse": sp, "smoke": args.smoke},
+             "fused_small": fs, "sparse": sp, "hier": hr,
+             "smoke": args.smoke},
             indent=2, default=float))
         print(f"wrote measurements -> {args.json}")
     if U < 256:                  # the acceptance bars are defined at U=256
@@ -376,11 +420,17 @@ def main() -> None:
                          f"dense engine at U={sp['U']}, C={sp['C']} (got "
                          f"{sp['speedup']:.1f}x; the round should scale "
                          "with the slot count, not the population)")
+    elif args.smoke and hr["ratio"] > 3:
+        raise SystemExit("FAIL: two-tier aggregation round costs more than "
+                         f"3x the flat round at U={hr['U']}, K={hr['K']} "
+                         f"(got {hr['ratio']:.2f}x; the per-cluster unroll "
+                         "should add an O(K*N) second stage, not K "
+                         "full-width passes)")
     else:
         print("PASS: pipeline >= 10x, request generation >= 10x"
               + (", harness round >= 4x, fused single-dispatch >= 1x "
                  "at U=256 and >= 2x at U=16, sparse cohort >= 5x "
-                 "at U=4096"
+                 "at U=4096, two-tier aggregation <= 3x flat at K=8"
                  if args.smoke else ""))
 
 

@@ -10,7 +10,7 @@ Two measurements against the streaming checkpoint layer
     hot swaps — a server already serving round k remaps when round k+1
     appears, the production reload. Medians over ``--trials`` fresh
     servers; per-reload staleness comes from the server's own reload log.
-  * round_overhead: the same ``run_vectorized_experiment`` mlp run three
+  * round_overhead: the same stacked-engine ``harness.run`` mlp run three
     ways — no checkpointing, ``checkpoint_async=True`` (the v2 background
     writer: submit = tree walk only) and ``checkpoint_async=False`` (the
     blocking v1 npz save on the round loop) — with ``save_every_k=1`` so
@@ -43,8 +43,8 @@ if __package__ in (None, ""):    # executed as a script: python benchmarks/...
 
 import numpy as np
 
-from benchmarks.common import (ExperimentConfig, checkpoint_path,
-                               run_vectorized_experiment)
+from repro import harness
+from repro.harness import ExperimentConfig, checkpoint_path
 from repro.launch.serve import ModelServer, make_request_batch
 
 
@@ -64,8 +64,8 @@ def _steady_round_s(history) -> float:
 def bench_reload(workdir: Path, rounds: int, trials: int) -> dict:
     """Cold-map and hot-swap reload latency over real snapshots."""
     src = workdir / "train"
-    run_vectorized_experiment("osafl", _bench_cfg(rounds), eval_samples=32,
-                              save_every_k=1, checkpoint_dir=src)
+    harness.run("osafl", _bench_cfg(rounds), eval_samples=32,
+                save_every_k=1, checkpoint_dir=src)
     snaps = sorted(p for p in src.iterdir() if p.is_dir())
     assert len(snaps) >= 2, snaps
     cold, swap, behind = [], [], []
@@ -107,7 +107,7 @@ def bench_round_overhead(workdir: Path, rounds: int) -> dict:
                              "checkpoint_dir": workdir / "blocking",
                              "checkpoint_async": False})):
         t0 = time.perf_counter()
-        hist = run_vectorized_experiment("osafl", xc, eval_samples=32, **kw)
+        hist = harness.run("osafl", xc, eval_samples=32, **kw)
         out[mode] = {"round_s": _steady_round_s(hist),
                      "total_s": time.perf_counter() - t0}
     base = out["none"]["round_s"]

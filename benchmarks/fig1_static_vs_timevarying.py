@@ -22,7 +22,8 @@ if __package__ in (None, ""):    # executed as a script: python benchmarks/...
 import numpy as np
 
 from benchmarks import curves
-from benchmarks.common import ExperimentConfig, run_vectorized_experiment
+from repro import harness
+from repro.harness import ExperimentConfig
 
 PRESETS = {
     # CI scale: seconds on a 2-core CPU
@@ -41,11 +42,11 @@ def run(preset="smoke", seed=0, scenario="", out=None):
     # time-varying: the native online world (plus any CLI overlay)
     xc_tv = dataclasses.replace(
         base, scenario=curves.compose_specs(scenario))
-    tv = run_vectorized_experiment("osafl", xc_tv)
+    tv = harness.run("osafl", xc_tv)
     # static: freeze the datasets through the scenario layer
     xc_st = dataclasses.replace(
         base, scenario=curves.compose_specs("quiet(scale=0.0)", scenario))
-    st = run_vectorized_experiment("osafl", xc_st)
+    st = harness.run("osafl", xc_st)
     tv_acc = [h["test_acc"] for h in tv]
     st_acc = [h["test_acc"] for h in st]
     # instability metric: std of round-to-round accuracy deltas

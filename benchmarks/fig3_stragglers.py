@@ -20,7 +20,7 @@ if __package__ in (None, ""):    # executed as a script: python benchmarks/...
 import numpy as np
 
 from benchmarks import curves
-from benchmarks.common import MODEL_PARAMS
+from repro.harness import MODEL_PARAMS
 from repro.core.resource import NetworkConfig, make_clients
 from repro.core.resource_stacked import optimize_round_batched, stack_clients
 from repro.scenarios import parse_scenario

@@ -1,7 +1,7 @@
 """Paper Tables II-III / Figs. 4-5: test accuracy/loss of OSAFL vs the five
 modified baselines (+ centralized Genie) on video-caching Dataset-1.
 Reproduced on the stacked engine: every algorithm runs the full online
-wireless setting under ``run_vectorized_experiment`` (one vmapped cohort,
+wireless setting under ``repro.harness.run`` (one vmapped cohort,
 batched FIFO arrivals, joint resource solve), optionally under a scenario
 overlay (``--scenario``, src/repro/scenarios/). ``--preset paper`` runs
 the EXPERIMENTS.md Dataset-1 paper-scale shape; the smoke preset keeps CI
@@ -22,9 +22,8 @@ if __package__ in (None, ""):    # executed as a script: python benchmarks/...
 import numpy as np
 
 from benchmarks import curves
-from benchmarks.common import (ALL_ALGS, ExperimentConfig,
-                               run_centralized_sgd,
-                               run_vectorized_experiment)
+from repro import harness
+from repro.harness import ALL_ALGS, ExperimentConfig
 
 PRESETS = {
     "smoke": dict(models=("fcn",), topks=(1,), rounds=6, num_clients=8),
@@ -51,14 +50,14 @@ def run(preset="smoke", seed=0, scenario="", out=None):
             # wireless world for a scenario to perturb, so it is only run
             # for the unperturbed table column
             if not spec or spec == "null":
-                cen = run_centralized_sgd(
-                    dataclasses.replace(xc, scenario=""))
+                cen = harness.run(
+                    "centralized", dataclasses.replace(xc, scenario=""))
                 summary[f"table2_{model}_K{k}_central_acc"] = \
                     max(h["test_acc"] for h in cen)
                 curve_list.append(curves.curve_from_history(
                     f"{model}_K{k}_central", cen, algorithm="central"))
             for alg in ALL_ALGS:
-                hist = run_vectorized_experiment(alg, xc)
+                hist = harness.run(alg, xc)
                 accs = [h["test_acc"] for h in hist]
                 losses = [h["test_loss"] for h in hist]
                 i = int(np.argmax(accs))

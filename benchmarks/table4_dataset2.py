@@ -1,7 +1,7 @@
 """Paper Tables IV-V / Fig. 6: Dataset-2 (pure time-series of content IDs)
 with the LSTM model: OSAFL vs modified baselines + centralized Genie.
 Reproduced on the stacked engine: every algorithm runs the full online
-wireless setting under ``run_vectorized_experiment``; ``--preset paper``
+wireless setting under ``repro.harness.run``; ``--preset paper``
 is exactly the EXPERIMENTS.md paper-scale recipe (LSTM / Dataset-2 /
 U=256 / T=100 / D_u in [320, 640] / stacked request backend), and
 ``--scenario`` overlays a wireless-world perturbation
@@ -22,9 +22,8 @@ if __package__ in (None, ""):    # executed as a script: python benchmarks/...
 import numpy as np
 
 from benchmarks import curves
-from benchmarks.common import (ALL_ALGS, ExperimentConfig,
-                               run_centralized_sgd,
-                               run_vectorized_experiment)
+from repro import harness
+from repro.harness import ALL_ALGS, ExperimentConfig
 
 PRESETS = {
     "smoke": dict(model="lstm", topks=(1,), rounds=6, num_clients=8,
@@ -49,14 +48,14 @@ def run(preset="smoke", seed=0, scenario="", out=None):
         # the Genie has no wireless world for a scenario to perturb — only
         # run it for the unperturbed table column (python streams only)
         if not spec or spec == "null":
-            cen = run_centralized_sgd(dataclasses.replace(
+            cen = harness.run("centralized", dataclasses.replace(
                 xc, scenario="", request_backend="python"))
             summary[f"table4_K{k}_central_acc"] = \
                 max(h["test_acc"] for h in cen)
             curve_list.append(curves.curve_from_history(
                 f"K{k}_central", cen, algorithm="central"))
         for alg in ALL_ALGS:
-            hist = run_vectorized_experiment(alg, xc)
+            hist = harness.run(alg, xc)
             accs = [h["test_acc"] for h in hist]
             losses = [h["test_loss"] for h in hist]
             i = int(np.argmax(accs))

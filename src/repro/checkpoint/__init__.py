@@ -10,7 +10,7 @@ Two layers, one on-disk convention (``<path>[.npz]`` + ``<path>.meta.json``):
     ``run_state.py``) — versioned nested-tree snapshots covering everything
     a long online FL run accumulates (FIFO buffers, staged arrivals, server
     contribution buffers, scores, staleness, Generator streams). The
-    harness wiring lives in ``benchmarks/common.py`` (``save_every_k`` /
+    harness wiring lives in ``repro/harness/experiments.py`` (``save_every_k`` /
     ``resume_from``); resume determinism is proven bit-exactly by
     ``tests/test_checkpoint_resume.py``.
 

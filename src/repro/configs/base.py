@@ -214,7 +214,7 @@ class FLConfig:
                                       # data/video_caching_stacked.py,
                                       # stacked engine only). Applied at the
                                       # data layer by the cohort harness
-                                      # (benchmarks/common.py), recorded
+                                      # (repro/harness/), recorded
                                       # here; servers never consult it.
     round_backend: str = "dispatch"   # online round execution: dispatch
                                       # (~7 device programs/round with host
@@ -238,6 +238,19 @@ class FLConfig:
                                       # the slot pool (Dinh et al. partial
                                       # participation; <1 requires
                                       # cohort_size>0). Harness-applied.
+    num_clusters: int = 0             # K: hierarchical edge-cluster
+                                      # aggregation (core/hierarchy.py).
+                                      # 0 = flat PS (the historical path,
+                                      # no hierarchy plumbing); 1 = one
+                                      # cluster routed through the two-tier
+                                      # round body (bit-exact vs flat — the
+                                      # parity anchor); >1 = K edge clusters
+                                      # score-reduce locally and the PS
+                                      # combines the K aggregates with
+                                      # cluster-level eq. 19-21 scores.
+                                      # Stacked/pod engines only; K must
+                                      # divide num_clients (and cohort_size
+                                      # when the slot pool is on).
     scenario: str = ""                # composable wireless-world scenario
                                       # spec (src/repro/scenarios/): ""
                                       # = none (the historical code path),
@@ -247,7 +260,7 @@ class FLConfig:
                                       # perturbations, e.g.
                                       # "churn(p_away=0.3)+flash_crowd()".
                                       # Applied at the harness hook points
-                                      # (benchmarks/common.py), recorded
+                                      # (repro/harness/), recorded
                                       # here; servers never consult it.
     resource_backend: str = "x64"     # SCA resource solve numerics: x64
                                       # (scoped-f64 parity oracle) | f32

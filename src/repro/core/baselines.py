@@ -368,10 +368,19 @@ def make_server(params, fl: FLConfig, num_clients: int, seed: int = 0,
         return SparseCohortServer(params, fl, num_clients, seed=seed,
                                   mesh=mesh)
     if fl.engine == "stacked":
+        if fl.num_clusters >= 1:
+            # hierarchical edge-cluster tier: the two-tier round bodies
+            # (core/hierarchy.py; num_clusters=1 is the flat-parity anchor)
+            from repro.core.hierarchy import make_hier_server
+            return make_hier_server(params, fl, num_clients, seed=seed)
         if fl.algorithm == "osafl":
             return StackedOSAFLServer(params, fl, num_clients, seed=seed)
         return STACKED_SERVERS[fl.algorithm](params, fl, num_clients,
                                              seed=seed)
+    if fl.num_clusters >= 1:
+        raise ValueError(
+            "num_clusters>=1 needs the stacked engine (the loop servers "
+            f"are flat per-user oracles; got engine={fl.engine!r})")
     if fl.algorithm == "osafl":
         return OSAFLServer(params, fl, num_clients, seed=seed)
     return SERVERS[fl.algorithm](params, fl, num_clients, seed=seed)

@@ -319,18 +319,39 @@ class SparseCohortServer:
         self.fl = fl
         self.U = int(num_users)
         self.C = capacity
+        self.K = int(fl.num_clusters)
         self.is_osafl = fl.algorithm == "osafl"
         inner_fl = dataclasses.replace(fl, num_clients=capacity,
                                        cohort_size=0, participation=1.0)
-        if self.is_osafl:
+        if self.K >= 1:
+            # hierarchical: K per-cluster slot blocks in front of the
+            # two-tier inner servers (core/hierarchy.py). inner_fl keeps
+            # fl.num_clusters, so the width-C inner round body splits its
+            # buffer into the same K blocks the pool keeps contiguous.
+            from repro.core.hierarchy import (ClusterSlotPool,
+                                              contiguous_clusters,
+                                              make_hier_server)
+            self.assign = contiguous_clusters(self.U, self.K)
+            if capacity % self.K:
+                raise ValueError(
+                    f"num_clusters must divide cohort_size "
+                    f"(got K={self.K}, C={capacity})")
+            self.inner = make_hier_server(params, inner_fl, capacity,
+                                          seed=seed)
+            self.pool = ClusterSlotPool(self.U, capacity, self.assign,
+                                        self.K)
+        elif self.is_osafl:
+            self.assign = None
             self.inner = StackedOSAFLServer(params, inner_fl, capacity,
                                             seed=seed)
+            self.pool = SlotPool(num_users, capacity)
         elif fl.algorithm in STACKED_SERVERS:
+            self.assign = None
             self.inner = STACKED_SERVERS[fl.algorithm](params, inner_fl,
                                                        capacity, seed=seed)
+            self.pool = SlotPool(num_users, capacity)
         else:
             raise ValueError(f"unknown algorithm {fl.algorithm!r}")
-        self.pool = SlotPool(num_users, capacity)
         tables = {"participated": np.zeros(self.U, bool)}
         if self.is_osafl:
             tables["scores"] = np.ones(self.U, np.float32)
@@ -374,6 +395,43 @@ class SparseCohortServer:
         return np.asarray(self.tables["scores"])
 
     # -- admission -----------------------------------------------------------
+    def initial_residents(self) -> np.ndarray:
+        """The users seated before round 0: the first ``C`` ids on the flat
+        pool; under hierarchy the first ``C/K`` members of *each* cluster, so
+        every cluster block starts full. With the contiguous static map at
+        K=1 both are exactly ``arange(C)`` — the parity anchor."""
+        if self.K < 1:
+            return np.arange(self.C, dtype=np.int64)
+        B = self.C // self.K
+        return np.concatenate([
+            np.flatnonzero(self.assign == k)[:B] for k in range(self.K)])
+
+    def apply_cluster_moves(self, users, dest):
+        """Scenario-driven membership churn: move ``users`` to clusters
+        ``dest``. Residents among the movers are evicted from their old
+        block and immediately re-seated in the destination block (FIFO-
+        evicting there as needed) — their carried tables follow them via the
+        normal ``admit`` gather, but slot-resident contribution rows and FIFO
+        datasets reset (edge migration does not move data between edge
+        servers). Returns ``(moved_resident_users, AdmitResult)``; the
+        caller must reset the same slots in its slot-indexed dataset buffer,
+        exactly as after any admission."""
+        if self.K < 1:
+            raise ValueError(
+                "cluster moves require a hierarchical run (num_clusters>=1)")
+        users = np.asarray(users, np.int64).ravel()
+        dest = np.asarray(dest, np.int64).ravel()
+        if users.size:
+            # a user named twice takes the LAST destination (scenario
+            # composition order = sequential application)
+            _, first_rev = np.unique(users[::-1], return_index=True)
+            keep = np.sort(users.size - 1 - first_rev)
+            users, dest = users[keep], dest[keep]
+        moved = self.pool.reassign(users, dest)
+        if moved.size == 0:
+            return moved, None
+        return moved, self.admit(moved)
+
     def admit(self, users) -> AdmitResult:
         """Seat ``users`` in the pool (FIFO-evicting as needed) and load each
         newly seated slot: carried per-user state is gathered from the
@@ -473,7 +531,20 @@ class SparseCohortServer:
                 + ", ".join(missing)
                 + "); dense-engine snapshots cannot restore into a "
                 "cohort_size>0 run")
-        validate_cohort_shapes(sd["pool"], self.U, self.C)
+        if self.K >= 1:
+            if "pools" not in sd["pool"]:
+                raise CheckpointError(
+                    "snapshot slot pool is flat (no per-cluster pools); it "
+                    "cannot restore into a num_clusters"
+                    f"={self.K} hierarchical run")
+            # ClusterSlotPool.load_state_dict validates K/assign/sub-pools
+        else:
+            if "pools" in sd["pool"]:
+                raise CheckpointError(
+                    "snapshot slot pool is hierarchical (per-cluster "
+                    "pools); it cannot restore into a flat "
+                    "(num_clusters=0) run")
+            validate_cohort_shapes(sd["pool"], self.U, self.C)
         self.pool.load_state_dict(sd["pool"])
         self.inner.load_state_dict(sd["inner"])
         self.tables.load_state_dict(sd["tables"])

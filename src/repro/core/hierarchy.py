@@ -1,0 +1,435 @@
+"""Hierarchical edge-cluster aggregation (DESIGN.md "Hierarchical
+aggregation").
+
+The paper's PS consumes every client's scored update directly (eq. 19-21),
+which caps honest scale at "one PS, U slots". This module adds the edge tier
+per Zhou et al., "Towards Scalable Wireless Federated Learning" (2310.05076):
+the registered population is partitioned into ``K`` edge clusters, each
+cluster runs the *same* scored reduction the flat PS ran — per-cluster mean,
+``scored_reduce`` cosine scores, scored partial aggregate — and the PS then
+combines the ``K`` cluster aggregates with cluster-level weights derived from
+the identical eq. 19-21 machinery. OSAFL's online scores compose across
+tiers instead of flattening; per-tier aggregation cost is O(C/K + K) rather
+than O(C) at one PS, and clusters are the natural multi-host boundary.
+
+Layout invariant — clusters are **contiguous slot blocks**. The width-C
+stacked buffer is split into K equal blocks of ``B = C/K`` consecutive slots;
+cluster ``k`` owns slots ``[k*B, (k+1)*B)``. On the dense path the user->
+cluster map is the static contiguous partition (``u // (U/K)``), so user
+rows already sit in their cluster's block. On the sparse-cohort path
+``ClusterSlotPool`` keeps K per-cluster ``SlotPool``s so a cluster's
+residents stay contiguous (and, on a pod mesh with ``K % client_rows == 0``,
+each mesh shard holds only whole cluster blocks — no block ever straddles a
+shard).
+
+Bit-exactness anchors (tests/test_hierarchy.py):
+
+  * ``num_clusters=0`` is the historical flat path, untouched.
+  * ``num_clusters=1`` routes through the hierarchy plumbing with a single
+    cluster and is bit-exact against the flat PS for all six algorithms:
+    the tier-1 block ops are the flat ops on the full buffer (same
+    ``jnp.mean``/``scored_reduce``/matvec), and the tier-2 combine takes the
+    documented exact limit — a single cluster aggregate's cosine with its
+    own mean is identically 1, so the PS step *is* the cluster aggregate
+    (``step = g[0]``, no reduction applied).
+  * Per-cluster score carries (``clam_prev``) checkpoint with the inner
+    server state, so a K>1 run resumes bit-exactly from a streaming v2
+    snapshot.
+
+Cluster membership is scenario-drivable (``cluster_churn`` in
+``scenarios/library.py``): a reassigned resident is evicted from its old
+block and re-seated in the new one — its slot-resident contribution row and
+FIFO dataset are reset (edge migration does not move data between edge
+servers; the per-user score/staleness carries in ``CohortTables`` follow the
+user). The per-cluster tier-2 carry stays with the *block*, i.e. with the
+edge server, not with any member.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.baselines import STACKED_SERVERS
+from repro.core.osafl import StackedOSAFLServer
+from repro.core.scores import sketch_stacked
+
+
+def contiguous_clusters(num_users: int, num_clusters: int) -> np.ndarray:
+    """The static user->cluster map: K equal contiguous ranges. Requires
+    ``K | U`` so every cluster has the same population share (and the dense
+    (U, N) buffer splits into equal blocks)."""
+    U, K = int(num_users), int(num_clusters)
+    if K < 1 or U % K:
+        raise ValueError(
+            f"num_clusters must be >= 1 and divide the population "
+            f"(got K={K}, U={U})")
+    return (np.arange(U, dtype=np.int32) // (U // K)).astype(np.int32)
+
+
+def sample_participants_clustered(rng: np.random.Generator,
+                                  assign: np.ndarray, num_clusters: int,
+                                  m: int, block: int,
+                                  weights: Optional[np.ndarray] = None,
+                                  available: Optional[np.ndarray] = None
+                                  ) -> np.ndarray:
+    """Stratified round-active sampling over the live cluster map: each
+    cluster draws a budget proportional to its population share
+    (``ceil(m * n_k / U)``, capped by its ``block`` slot capacity and its
+    eligible members), via ``sample_participants`` on the member subsets in
+    cluster order. At ``K <= 1`` this *delegates* to ``sample_participants``
+    with the identical arguments — the same host-RNG consumption, which is
+    what keeps the num_clusters=1 parity anchor bit-exact."""
+    from repro.core.cohort import sample_participants
+    if num_clusters <= 1:
+        return sample_participants(rng, int(assign.shape[0]), m,
+                                   weights=weights, available=available)
+    U = int(assign.shape[0])
+    picked = []
+    for k in range(int(num_clusters)):
+        members = np.flatnonzero(assign == k)
+        if members.size == 0:
+            continue
+        m_k = min(int(block), int(members.size),
+                  int(np.ceil(m * members.size / U)))
+        w_k = None if weights is None else np.asarray(weights)[members]
+        a_k = None if available is None else np.asarray(available)[members]
+        idx = sample_participants(rng, int(members.size), m_k,
+                                  weights=w_k, available=a_k)
+        picked.append(members[idx])
+    if not picked:
+        return np.empty(0, np.int64)
+    return np.sort(np.concatenate(picked))
+
+
+class ClusterSlotPool:
+    """K per-cluster ``SlotPool``s behind one global-slot interface.
+
+    Cluster ``k`` owns the contiguous global slot block
+    ``[k*B, (k+1)*B)`` with ``B = C/K``; users route to the sub-pool of
+    their *current* cluster (``assign``, shared with the owning
+    ``SparseCohortServer`` and mutated only through ``reassign``). Each
+    sub-pool keeps the flat pool's FIFO semantics within its block, so at
+    K=1 this degenerates to exactly one ``SlotPool(U, C)`` — the flat
+    behavior, slot for slot."""
+
+    def __init__(self, num_users: int, capacity: int, assign: np.ndarray,
+                 num_clusters: int):
+        from repro.core.cohort import SlotPool
+        U, C, K = int(num_users), int(capacity), int(num_clusters)
+        if K < 1 or C % K:
+            raise ValueError(
+                f"num_clusters must be >= 1 and divide cohort_size "
+                f"(got K={K}, C={C})")
+        assign = np.asarray(assign, np.int32)
+        if assign.shape != (U,):
+            raise ValueError(
+                f"cluster map must have shape ({U},), got {assign.shape}")
+        self.U, self.C, self.K = U, C, K
+        self.B = C // K
+        self.assign = assign                      # shared, mutated in place
+        self.pools = [SlotPool(U, self.B) for _ in range(K)]
+
+    # -- flat-pool interface -------------------------------------------------
+    @property
+    def user_slot(self) -> np.ndarray:
+        """(U,) user -> *global* slot map (-1 = not resident)."""
+        us = np.full(self.U, -1, np.int32)
+        for k, p in enumerate(self.pools):
+            r = p.user_slot >= 0
+            us[r] = p.user_slot[r] + k * self.B
+        return us
+
+    @property
+    def slot_user(self) -> np.ndarray:
+        """(C,) global slot -> user map (-1 = free)."""
+        return np.concatenate([p.slot_user for p in self.pools])
+
+    @property
+    def cohort(self) -> np.ndarray:
+        return self.slot_user
+
+    @property
+    def occupancy(self) -> int:
+        return sum(p.occupancy for p in self.pools)
+
+    def resident(self, users) -> np.ndarray:
+        return self.user_slot[np.asarray(users, np.int64)] >= 0
+
+    def admit(self, users):
+        """Route each user to its cluster's sub-pool; slots come back as
+        *global* indices aligned with the input order (the same
+        ``AdmitResult`` contract as the flat pool)."""
+        from repro.core.cohort import AdmitResult
+        users = np.asarray(users, np.int64).ravel()
+        if users.size and (users.min() < 0 or users.max() >= self.U):
+            raise ValueError(
+                f"user ids must be in [0, {self.U}); got range "
+                f"[{users.min()}, {users.max()}]")
+        slots = np.empty(users.size, np.int32)
+        newly = np.zeros(users.size, bool)
+        evicted = []
+        ks = self.assign[users] if users.size else np.empty(0, np.int32)
+        for k in range(self.K):
+            pos = np.flatnonzero(ks == k)
+            if pos.size == 0:
+                continue
+            res = self.pools[k].admit(users[pos])
+            slots[pos] = res.slots + k * self.B
+            newly[pos] = res.newly
+            if res.evicted.size:
+                evicted.append(res.evicted)
+        return AdmitResult(
+            slots=slots, newly=newly,
+            evicted=(np.concatenate(evicted).astype(np.int32)
+                     if evicted else np.empty(0, np.int32)))
+
+    def evict(self, users) -> np.ndarray:
+        """Free the users' slots in their current clusters' sub-pools
+        (non-residents are ignored). Returns the freed *global* slots."""
+        users = np.asarray(users, np.int64).ravel()
+        freed = []
+        for k in range(self.K):
+            sub = users[self.assign[users] == k]
+            f = self.pools[k].evict(sub)
+            if f.size:
+                freed.append(f + k * self.B)
+        return (np.concatenate(freed).astype(np.int32) if freed
+                else np.empty(0, np.int32))
+
+    def reassign(self, users, dest) -> np.ndarray:
+        """Move users to new clusters: evict movers from their *old* blocks
+        (while ``assign`` still routes there), then rewrite the map. Returns
+        the subset of ``users`` that was resident (the callers re-admit
+        those so residents migrate rather than silently vanish)."""
+        users = np.asarray(users, np.int64).ravel()
+        dest = np.asarray(dest, np.int64).ravel()
+        if users.shape != dest.shape:
+            raise ValueError("users and dest cluster ids must align")
+        if dest.size and (dest.min() < 0 or dest.max() >= self.K):
+            raise ValueError(
+                f"destination clusters must be in [0, {self.K})")
+        moving = dest != self.assign[users]
+        users, dest = users[moving], dest[moving]
+        was_res = self.resident(users)
+        self.evict(users[was_res])
+        self.assign[users] = dest.astype(np.int32)
+        return users[was_res]
+
+    def check(self) -> None:
+        for k, p in enumerate(self.pools):
+            p.check()
+            res = np.flatnonzero(p.user_slot >= 0)
+            stray = res[self.assign[res] != k]
+            if stray.size:
+                raise ValueError(
+                    f"users {stray.tolist()} resident in cluster {k}'s "
+                    f"block but assigned to clusters "
+                    f"{self.assign[stray].tolist()}")
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"assign": self.assign.copy(),
+                "num_clusters": np.int64(self.K),
+                "pools": [p.state_dict() for p in self.pools]}
+
+    def load_state_dict(self, sd: dict) -> None:
+        from repro.checkpoint.run_state import CheckpointError
+        if int(sd.get("num_clusters", -1)) != self.K:
+            raise CheckpointError(
+                f"snapshot slot pool has num_clusters="
+                f"{sd.get('num_clusters')!r}; the run expects K={self.K}")
+        assign = np.asarray(sd["assign"], np.int32)
+        if assign.shape != (self.U,):
+            raise CheckpointError(
+                f"snapshot cluster map has shape {assign.shape}; the run "
+                f"registers U={self.U} users")
+        pools = sd["pools"]
+        if len(pools) != self.K:
+            raise CheckpointError(
+                f"snapshot holds {len(pools)} cluster pools; the run "
+                f"expects {self.K}")
+        self.assign[:] = assign
+        for p, psd in zip(self.pools, pools):
+            p.load_state_dict(psd)
+        self.check()
+
+
+def make_hier_round_body(fl: FLConfig, num_clusters: int):
+    """The two-tier OSAFL round as one pure function
+
+        rnd(w, buf, part_prev, lam_prev, clam_prev, d_new, active, alphas,
+            key) -> (w, buf, part, lam_use, lam, clam_use, clam)
+
+    Tier 1 (edge): the flat round's write-back/staleness refresh, then each
+    cluster block scores its own slots against its own block mean — the
+    identical op sequence as ``make_stacked_round_body`` applied per block
+    (static K-way unroll inside one jit; at K=1 the single block IS the full
+    buffer, so every op matches the flat body bit for bit). Each edge then
+    forms its scored partial aggregate ``g_k = (alpha*lam)_k @ buf_k`` —
+    the (K, N) matrix an edge tier would transmit to the PS.
+
+    Tier 2 (PS): the K aggregates are scored with the same eq. 19-21
+    machinery (cosine against the cluster-mean direction) and combined,
+    ``step = clam_use @ g``; ``clam_prev`` is the cluster-level stale-score
+    carry mirroring ``lam_prev``. At K=1 the combine takes the exact limit
+    (one aggregate's cosine with its own mean is identically 1):
+    ``step = g[0]``, bit-exact vs the flat scored SGD step.
+    """
+    from repro.kernels.ops import _interpret
+    from repro.kernels.ref import scored_reduce_reference
+    from repro.kernels.scored_reduce import scored_reduce
+    interpret = _interpret()
+    K = int(num_clusters)
+    if K < 1:
+        raise ValueError(f"num_clusters must be >= 1, got {K}")
+
+    def scores_of(rows, key):
+        """eq. 19-21 lambda scores of a (n, N) row block against its own
+        mean — the flat body's scoring, applied to any tier's rows."""
+        if fl.score_sketch_dim:
+            sk = sketch_stacked(rows, key, fl.score_sketch_dim)
+            mean = jnp.mean(sk, axis=0)
+            dots = sk @ mean
+            norms = jnp.sum(sk * sk, axis=1)
+            msq = jnp.sum(mean * mean)
+        else:
+            mean = jnp.mean(rows, axis=0)
+            if fl.score_backend == "kernel":
+                dots, norms, msq = scored_reduce(rows, mean,
+                                                 interpret=interpret)
+            else:
+                dots, norms, msq = scored_reduce_reference(rows, mean)
+        cos = dots / jnp.maximum(jnp.sqrt(norms) * jnp.sqrt(msq), 1e-12)
+        return (fl.chi + cos) / (fl.chi + 1.0)
+
+    def rnd(w, buf, part_prev, lam_prev, clam_prev, d_new, active, alphas,
+            key):
+        part = part_prev | active
+        buf = jnp.where(active[:, None], d_new, buf)
+        # Algorithm 2 line 17: refresh never-participated slots
+        refresh = (w / fl.local_lr if fl.literal_init_buffer
+                   else jnp.zeros_like(w))
+        buf = jnp.where(part[:, None], buf, refresh[None, :])
+        B = buf.shape[0] // K
+        blk = [slice(k * B, (k + 1) * B) for k in range(K)]
+        # tier 1: per-cluster eq. 19-21 scores on the cluster's own slots
+        lam = jnp.concatenate([scores_of(buf[b], key) for b in blk])
+        lam_use = lam_prev if fl.stale_scores else lam
+        # each edge's scored partial aggregate — what it transmits to the PS
+        g = jnp.stack([(alphas[b] * lam_use[b]) @ buf[b] for b in blk])
+        if K == 1:
+            # exact limit: cos(g_0, mean(g)) = cos(g_0, g_0) = 1, so the
+            # combine is the aggregate itself — bit-exact vs the flat step
+            clam = jnp.ones((1,), jnp.float32)
+            clam_use = clam_prev if fl.stale_scores else clam
+            step = g[0]
+        else:
+            # tier 2: the SAME score machinery over the K cluster aggregates
+            clam = scores_of(g, key)
+            clam_use = clam_prev if fl.stale_scores else clam
+            step = clam_use @ g
+        w = w - fl.global_lr * fl.local_lr * step
+        return w, buf, part, lam_use, lam, clam_use, clam
+
+    return rnd
+
+
+class HierStackedOSAFLServer(StackedOSAFLServer):
+    """``StackedOSAFLServer`` with the two-tier round body: same state plus
+    the (K,) cluster-level score carry ``clam_prev`` (checkpointed) and the
+    per-round cluster scores in ``last_cluster_scores``. Rows are expected
+    in cluster-block order (slot ``k*B + i`` belongs to cluster ``k``)."""
+
+    def __init__(self, params, fl: FLConfig, num_clients: int,
+                 alphas=None, seed: int = 0):
+        K = int(fl.num_clusters)
+        if K < 1 or num_clients % K:
+            raise ValueError(
+                f"num_clusters must be >= 1 and divide the stacked width "
+                f"(got K={K}, width={num_clients})")
+        super().__init__(params, fl, num_clients, alphas=alphas, seed=seed)
+        self.K = K
+        self._clam_prev = jnp.ones(K, jnp.float32)
+        self.last_cluster_scores = np.ones(K)
+        self._round_fn = jax.jit(make_hier_round_body(fl, K))
+
+    def round_stacked(self, d_new, active):
+        (self.w, self.d_buffer, self.participated, lam_use, self._lam_prev,
+         clam_use, self._clam_prev) = self._round_fn(
+            self.w, self.d_buffer, self.participated, self._lam_prev,
+            self._clam_prev, d_new, jnp.asarray(active), self.alphas,
+            self._sketch_key)
+        self.last_scores = np.asarray(lam_use)
+        self.last_cluster_scores = np.asarray(clam_use)
+        return self.w
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        sd = super().state_dict()
+        sd["clam_prev"] = self._clam_prev
+        return sd
+
+    def load_state_dict(self, sd: dict) -> None:
+        if sd.get("clam_prev") is None:
+            from repro.checkpoint.run_state import CheckpointError
+            raise CheckpointError(
+                "snapshot has no cluster-score carry (clam_prev) — it was "
+                "not written by a hierarchical (num_clusters>0) run")
+        super().load_state_dict(sd)
+        self._clam_prev = jnp.asarray(sd["clam_prev"])
+        self.last_cluster_scores = np.asarray(self._clam_prev)
+
+
+def _hier_baseline(base):
+    """Two-tier variant of a stacked baseline: the flat aggregation matvec
+    ``ws @ buffer`` becomes per-cluster partial aggregates summed at the PS.
+    Every weighting rule (FedAvg's 1/U, FedNova's pk, FedDisco's alpha)
+    composes unchanged — the blocked sum is the same linear combination, so
+    K>1 differs from flat only by float re-association, and K=1 returns the
+    single block's matvec itself (bit-exact vs flat)."""
+
+    class Hier(base):
+        def __init__(self, params, fl: FLConfig, num_clients: int,
+                     seed: int = 0):
+            K = int(fl.num_clusters)
+            if K < 1 or num_clients % K:
+                raise ValueError(
+                    f"num_clusters must be >= 1 and divide the stacked "
+                    f"width (got K={K}, width={num_clients})")
+            super().__init__(params, fl, num_clients, seed=seed)
+            self.K = K
+
+        def cluster_aggregates(self, ws) -> jnp.ndarray:
+            """(K, N) per-cluster partial aggregates under weights ``ws`` —
+            the edge-tier traffic a deployment would actually transmit."""
+            B = self.buffer.shape[0] // self.K
+            w32 = jnp.asarray(ws, jnp.float32)
+            return jnp.stack([
+                w32[k * B:(k + 1) * B] @ self.buffer[k * B:(k + 1) * B]
+                for k in range(self.K)])
+
+        def _weighted(self, ws) -> jnp.ndarray:
+            g = self.cluster_aggregates(ws)
+            return g[0] if self.K == 1 else jnp.sum(g, axis=0)
+
+    Hier.__name__ = "Hier" + base.__name__
+    Hier.__qualname__ = Hier.__name__
+    return Hier
+
+
+HIER_SERVERS = {alg: _hier_baseline(cls)
+                for alg, cls in STACKED_SERVERS.items()}
+
+
+def make_hier_server(params, fl: FLConfig, num_clients: int, seed: int = 0):
+    """The hierarchical counterpart of ``baselines.make_server``'s stacked
+    branch: width = the stacked buffer width (U dense, C sparse-inner)."""
+    if fl.algorithm == "osafl":
+        return HierStackedOSAFLServer(params, fl, num_clients, seed=seed)
+    if fl.algorithm in HIER_SERVERS:
+        return HIER_SERVERS[fl.algorithm](params, fl, num_clients, seed=seed)
+    raise ValueError(f"unknown algorithm {fl.algorithm!r}")

@@ -30,7 +30,7 @@ minibatches from its own buffer shard *inside* the shard_map body
 (``make_pod_batch_fn``), and runs the paper's masked kappa_u-step local SGD
 (``client.make_local_train_body``) per client. The step returns the stacked
 ``(d, w)`` client contributions; aggregation stays with the stacked servers
-(``benchmarks/common.py::run_pod_online_experiment``), whose dense
+(``repro.harness.run`` on the pod engine), whose dense
 ``(U, N)`` round ops shard over the same client axes under auto-SPMD.
 
 The online steps are indifferent to what the leading client dimension

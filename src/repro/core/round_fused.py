@@ -1,7 +1,7 @@
 """One-dispatch device-resident online OSAFL rounds (ROADMAP "One-dispatch
 device-resident rounds + accelerator-native precision").
 
-The multi-dispatch engine (``benchmarks/common.py::run_vectorized_experiment``
+The multi-dispatch engine (``repro.harness.run`` on the stacked engine
 with ``round_backend="dispatch"``) executes one online round as ~7 separate
 device programs with host work in between: a host-NumPy Binomial arrival
 draw, the stacked Gumbel request scan, the FIFO stage + commit scatters, the
@@ -52,7 +52,7 @@ consumers and cost ~1.6x on the full round at U=256. Backends:
 
 ``FusedEngine`` owns one AOT-compiled executable per distinct segment
 length (``compiled_text`` exposes its optimized HLO for
-``launch/hlo_analysis.dispatch_report``); ``benchmarks/common.py`` glues it
+``launch/hlo_analysis.dispatch_report``); ``repro/harness/experiments.py`` glues it
 to the harness state + RunState checkpoints and ``benchmarks/bench_online.py``
 times it and gates the single-dispatch claim.
 """
@@ -141,7 +141,7 @@ class FusedEngine:
     """Compiles and runs single-dispatch segments of the online OSAFL round.
 
     Construction takes only core/data-layer objects (no harness types);
-    ``benchmarks/common.py`` adapts its setup namespace. Restrictions: the
+    ``repro/harness/experiments.py`` adapts its setup namespace. Restrictions: the
     fused body is the OSAFL scored round over the stacked request stream, so
     ``fl.algorithm`` must be ``"osafl"`` and ``fl.request_backend``
     ``"stacked"``; the FIFO buffer must be unsharded (the segment is one

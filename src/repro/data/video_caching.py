@@ -18,7 +18,7 @@ The paper uses CIFAR-100 class features for x_ft; offline we substitute fixed
 random per-file features (same shapes) — recorded in EXPERIMENTS.md.
 
 This module is the **per-user oracle** of the request model: the loop harness
-(`benchmarks/common.py::run_experiment`) consumes it directly, and
+(`repro.harness.run` with `engine="loop"`) consumes it directly, and
 `data/online.py` bridges it into the stacked online pipeline when
 `request_backend="python"`. Its cohort-scale twin — all U users advanced per
 slot by one jitted Gumbel-trick program — is

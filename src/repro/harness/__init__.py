@@ -1,0 +1,23 @@
+"""The unified experiment harness: ``run(alg, xc)`` over every engine.
+
+``repro.harness.run`` is the single entry point (see ``experiments.py``);
+``repro.harness.compat`` holds the declarative config-compatibility matrix;
+the historical ``run_*`` entry points survive as deprecation shims (also
+re-exported from ``benchmarks.common``)."""
+from repro.harness.compat import (ALL_ALGS, ENGINES, POD_ENGINES,
+                                  ExperimentConfigError, ResolvedPlan,
+                                  resolve)
+from repro.harness.experiments import (MODEL_PARAMS, ExperimentConfig,
+                                       build_fused_engine, checkpoint_path,
+                                       resume_smoke_config, run,
+                                       run_centralized_sgd, run_experiment,
+                                       run_pod_online_experiment,
+                                       run_vectorized_experiment)
+
+__all__ = [
+    "ALL_ALGS", "ENGINES", "POD_ENGINES", "MODEL_PARAMS",
+    "ExperimentConfig", "ExperimentConfigError", "ResolvedPlan", "resolve",
+    "run", "build_fused_engine", "checkpoint_path", "resume_smoke_config",
+    "run_centralized_sgd", "run_experiment", "run_pod_online_experiment",
+    "run_vectorized_experiment",
+]

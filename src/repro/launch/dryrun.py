@@ -20,10 +20,10 @@ No real arrays are allocated: parameters/batches/caches enter as
 ShapeDtypeStructs via jax.eval_shape.
 
 Online pod mode (EXPERIMENTS.md "Pod online harness"): ``--online`` instead
-*executes* ``benchmarks/common.py::run_pod_online_experiment`` — the paper's
+*executes* ``repro.harness.run`` on the pod engine — the paper's
 FIFO-arrival setting on a mesh-sharded buffer — for every pod engine on a
 small ('pod','data') CPU mesh, asserting finite losses and that the per-round
-history schema matches ``run_vectorized_experiment``'s. This is the CI
+history schema matches the stacked engine's. This is the CI
 ``pod-smoke`` entrypoint:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
@@ -362,27 +362,22 @@ def run_online(*, pod: int, data: int | None, rounds: int, clients: int,
     client mesh (see module docstring). Raises SystemExit(1) on any
     non-finite loss or history-schema mismatch; returns the per-engine
     records and writes them as one JSON into ``out_dir``."""
-    import sys
-    root = Path(__file__).resolve().parents[3]
-    if str(root) not in sys.path:     # benchmarks/ lives at the repo root
-        sys.path.insert(0, str(root))
-    from benchmarks.common import (ExperimentConfig, POD_ENGINES,
-                                   run_pod_online_experiment,
-                                   run_vectorized_experiment)
+    from repro.harness import POD_ENGINES, ExperimentConfig, resolve, run
 
     data = data or max(jax.device_count() // pod, 1)
     mesh = jax.make_mesh((pod, data), ("pod", "data"))
     xc = ExperimentConfig(model=model, dataset=2, num_clients=clients,
                           rounds=rounds, capacity=(12, 24), arrivals=4,
                           batch=8, seed=5, request_backend="stacked")
-    schema = set(run_vectorized_experiment(
-        "osafl", dataclasses.replace(xc, rounds=1), eval_samples=64)[0])
+    schema = set(run("osafl", dataclasses.replace(xc, rounds=1),
+                     eval_samples=64)[0])
     records, failures = [], []
     for engine in (engines or POD_ENGINES):
         alg = "fedavg" if engine == "fedavg" else "osafl"
+        print("plan:", resolve(alg, xc, mesh=mesh,
+                               pod_engine=engine).describe())
         t0 = time.time()
-        hist = run_pod_online_experiment(alg, xc, eval_samples=64,
-                                         mesh=mesh, pod_engine=engine)
+        hist = run(alg, xc, eval_samples=64, mesh=mesh, pod_engine=engine)
         losses = [h["test_loss"] for h in hist]
         if not all(np.isfinite(losses)):
             failures.append(f"{engine}: non-finite losses {losses}")

@@ -2,7 +2,7 @@
 
 A *scenario* is a pure, seeded schedule of per-round perturbations applied to
 the online FL harnesses through four explicit hook points in
-``benchmarks/common.py``:
+``repro/harness/experiments.py``:
 
   * **setup hooks** (once, before round 0): per-client storage capacities
     (``init_capacities``) and the static resource-config rows — ``f_max``,
@@ -50,6 +50,7 @@ _H_ARRIVALS = 3
 _H_SYSTEM = 4
 _H_AVAILABLE = 5
 _H_SELECT = 6
+_H_CLUSTER = 7
 _SALT = 0x05AF1
 
 
@@ -98,6 +99,13 @@ class Perturbation:
     def selection_weights(self, rng, t: int, num_users: int
                           ) -> Optional[np.ndarray]:
         """(U,) nonnegative participation-sampling weights. None = uniform."""
+        return None
+
+    def cluster_moves(self, rng, t: int, num_users: int, num_clusters: int
+                      ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Edge-cluster membership churn for round t (hierarchical runs
+        only): ``(users, dest_clusters)`` reassignments, or None = the
+        cluster map is unchanged this round."""
         return None
 
     def __repr__(self):
@@ -219,6 +227,34 @@ class Scenario:
                         f"{p.name}: selection weights must be nonnegative")
                 w = out if w is None else (w * out)
         return w
+
+    @property
+    def moves_clusters(self) -> bool:
+        """True when any perturbation can rewrite the cluster map — the
+        hierarchical harness only runs the churn hook (and the admission
+        resets it implies) when this is set, keeping static-map runs on the
+        unperturbed path."""
+        return any(getattr(p, "moves_clusters", False)
+                   for p in self.perturbations)
+
+    def round_cluster_moves(self, t: int, num_users: int, num_clusters: int
+                            ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Concatenation of every perturbation's cluster reassignments (in
+        composition order — later terms win on a user moved twice, matching
+        sequential application); None if none fired."""
+        self._check_bound()
+        users, dest = None, None
+        for i, p in enumerate(self.perturbations):
+            out = p.cluster_moves(self._rng(_H_CLUSTER, t, i), t,
+                                  num_users, num_clusters)
+            if out is not None:
+                u = np.asarray(out[0], np.int64)
+                d = np.asarray(out[1], np.int64)
+                users = u if users is None else np.concatenate([users, u])
+                dest = d if dest is None else np.concatenate([dest, d])
+        if users is None:
+            return None
+        return users, dest
 
 
 # ---------------------------------------------------------------------------

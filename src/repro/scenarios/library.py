@@ -165,6 +165,38 @@ class DeviceClasses(Perturbation):
             p_max=sysb.p_max * np.where(w, self.p, 1.0))
 
 
+@register("cluster_churn")
+class ClusterChurn(Perturbation):
+    """Edge-cluster membership churn (hierarchical runs, ``num_clusters``
+    > 1): every ``period`` rounds an expected ``rate`` fraction of users is
+    reassigned to a uniformly drawn cluster (a same-cluster draw is a
+    no-op — real handovers are a subset of draws). Movers that are
+    slot-resident migrate blocks immediately: carried score tables follow
+    them, slot-resident contribution rows and FIFO datasets reset (see
+    ``core/hierarchy.py``). Pure in (seed, t) like every hook, so the live
+    cluster map at round t replays identically across resume. No effect on
+    flat or K=1 runs (the hook returns None)."""
+
+    moves_clusters = True
+
+    def __init__(self, rate: float = 0.05, period: int = 1):
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must lie in [0, 1] (got {rate})")
+        if period < 1:
+            raise ValueError(f"period must be >= 1 (got {period})")
+        self.rate = float(rate)
+        self.period = int(period)
+
+    def cluster_moves(self, rng, t, num_users, num_clusters):
+        if num_clusters <= 1 or t % self.period:
+            return None
+        users = np.flatnonzero(rng.random(num_users) < self.rate)
+        if users.size == 0:
+            return None
+        dest = rng.integers(0, num_clusters, users.size)
+        return users, dest
+
+
 @register("pareto_select")
 class ParetoSelect(Perturbation):
     """Pareto-biased client selection (SNIPPETS.md Snippet 1): per-user

@@ -1,0 +1,213 @@
+"""Hierarchical edge-cluster aggregation (``core/hierarchy.py``).
+
+Covers the tentpole contracts: ``num_clusters=1`` is bit-exact against the
+flat parameter server for all six algorithms on both request backends (the
+parity anchor — the two-tier round body at K=1 is the flat op sequence);
+K>1 produces a different (finite) trajectory with per-cluster scores;
+cluster-membership churn under the scenario RNG contract is deterministic
+and resumes bit-exactly from a streaming v2 snapshot with a live cluster
+map; and the ``ClusterSlotPool`` unit semantics (per-cluster routing,
+reassign-with-migration, checkpoint round-trip)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointError
+from repro.core.cohort import SlotPool, sample_participants
+from repro.core.hierarchy import (ClusterSlotPool, contiguous_clusters,
+                                  sample_participants_clustered)
+from repro.harness import (ALL_ALGS, ExperimentConfig, checkpoint_path,
+                           run)
+
+BASE = dict(model="mlp", dataset=2, num_clients=8, rounds=3,
+            capacity=(12, 24), arrivals=4, batch=8, seed=5)
+METRICS = ("round", "test_loss", "test_acc", "participants")
+
+
+def _key(history):
+    return [tuple(h[k] for k in METRICS) for h in history]
+
+
+# ---------------------------------------------------------------------------
+# K=1 parity anchor: the two-tier round at one cluster IS the flat round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("request_backend", ["python", "stacked"])
+@pytest.mark.parametrize("alg", ALL_ALGS)
+def test_k1_bit_exact_vs_flat(alg, request_backend):
+    xc = ExperimentConfig(request_backend=request_backend, **BASE)
+    flat = run(alg, xc, eval_samples=64)
+    hier = run(alg, dataclasses.replace(xc, num_clusters=1),
+               eval_samples=64)
+    assert _key(hier) == _key(flat)     # rtol=0, atol=0
+
+
+def test_k1_bit_exact_on_sparse_cohort():
+    xc = ExperimentConfig(request_backend="stacked", cohort_size=4,
+                          participation=0.75, **BASE)
+    flat = run("osafl", xc, eval_samples=64)
+    hier = run("osafl", dataclasses.replace(xc, num_clusters=1),
+               eval_samples=64)
+    assert _key(hier) == _key(flat)
+
+
+def test_k4_differs_and_is_finite():
+    xc = ExperimentConfig(request_backend="stacked", **BASE)
+    flat = run("osafl", xc, eval_samples=64)
+    hier = run("osafl", dataclasses.replace(xc, num_clusters=4),
+               eval_samples=64)
+    assert all(np.isfinite(h["test_loss"]) for h in hier)
+    # the second aggregation tier reweights cluster aggregates by their own
+    # eq. 19-21 scores, so the trajectory must actually move
+    assert _key(hier) != _key(flat)
+
+
+def test_k2_fedavg_matches_flat_numerically():
+    # for unscored baselines the two tiers compose to the same weighted sum,
+    # just re-associated into per-cluster partials — equal up to float
+    # summation order
+    xc = ExperimentConfig(request_backend="stacked", **BASE)
+    flat = run("fedavg", xc, eval_samples=64)
+    hier = run("fedavg", dataclasses.replace(xc, num_clusters=2),
+               eval_samples=64)
+    np.testing.assert_allclose([h["test_loss"] for h in hier],
+                               [h["test_loss"] for h in flat],
+                               rtol=1e-3, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cluster churn: scenario-driven membership moves, deterministic + resumable
+# ---------------------------------------------------------------------------
+
+def _churn_xc(rounds):
+    return ExperimentConfig(**dict(
+        BASE, rounds=rounds, request_backend="stacked", cohort_size=4,
+        participation=0.75, num_clusters=2,
+        scenario="cluster_churn(rate=0.4)"))
+
+
+def test_cluster_churn_deterministic():
+    a = run("osafl", _churn_xc(4), eval_samples=64)
+    b = run("osafl", _churn_xc(4), eval_samples=64)
+    assert _key(a) == _key(b)
+
+
+def test_cluster_churn_perturbs():
+    base = ExperimentConfig(**dict(
+        BASE, rounds=4, request_backend="stacked", cohort_size=4,
+        participation=0.75, num_clusters=2))
+    quiet = run("osafl", base, eval_samples=64)
+    churned = run("osafl", dataclasses.replace(
+        base, scenario="cluster_churn(rate=0.9)"), eval_samples=64)
+    assert _key(quiet) != _key(churned)
+
+
+def test_hier_churn_snapshot_resume_bit_exact(tmp_path):
+    full = run("osafl", _churn_xc(6), eval_samples=64)
+    run("osafl", _churn_xc(4), eval_samples=64, save_every_k=2,
+        checkpoint_dir=tmp_path)
+    resumed = run("osafl", _churn_xc(6), eval_samples=64,
+                  resume_from=checkpoint_path(tmp_path, 4))
+    # the resumed history carries the pre-snapshot rounds too; the live
+    # cluster map + per-cluster score carries must restore bit-exactly
+    assert _key(resumed) == _key(full)
+
+
+def test_flat_snapshot_refuses_hier_run(tmp_path):
+    xc = ExperimentConfig(**dict(BASE, request_backend="stacked",
+                                 cohort_size=4))
+    run("osafl", xc, eval_samples=64, save_every_k=BASE["rounds"],
+        checkpoint_dir=tmp_path)
+    with pytest.raises(CheckpointError, match="num_clusters"):
+        run("osafl", dataclasses.replace(xc, num_clusters=2),
+            eval_samples=64,
+            resume_from=checkpoint_path(tmp_path, BASE["rounds"]))
+
+
+# ---------------------------------------------------------------------------
+# cluster map + slot pool units
+# ---------------------------------------------------------------------------
+
+def test_contiguous_clusters():
+    np.testing.assert_array_equal(contiguous_clusters(8, 2),
+                                  [0, 0, 0, 0, 1, 1, 1, 1])
+    np.testing.assert_array_equal(contiguous_clusters(6, 1), np.zeros(6))
+    with pytest.raises(ValueError, match="divide the population"):
+        contiguous_clusters(8, 3)
+
+
+def test_cluster_pool_routes_admissions_per_block():
+    assign = contiguous_clusters(8, 2)
+    pool = ClusterSlotPool(8, 4, assign, 2)
+    res = pool.admit(np.array([0, 5, 1, 7]))
+    assert res.newly.all()
+    # cluster 0 users land in slots [0, 2), cluster 1 users in [2, 4)
+    assert set(res.slots[[0, 2]]) == {0, 1}
+    assert set(res.slots[[1, 3]]) == {2, 3}
+    assert sorted(pool.cohort.tolist()) == [0, 1, 5, 7]
+    pool.check()
+    # a full block FIFO-evicts within the block only
+    res2 = pool.admit(np.array([2]))
+    assert res2.evicted.size == 1 and res2.evicted[0] in (0, 1)
+    assert res2.slots[0] < 2
+    pool.check()
+
+
+def test_cluster_pool_reassign_migrates_residents():
+    assign = contiguous_clusters(8, 2)
+    pool = ClusterSlotPool(8, 4, assign, 2)
+    pool.admit(np.array([0, 1, 4, 5]))
+    moved = pool.reassign(np.array([1, 6]), np.array([1, 0]))
+    # user 6 was not resident: only the map changes; resident user 1 is
+    # evicted from block 0 and must be re-admitted by the caller
+    np.testing.assert_array_equal(moved, [1])
+    assert pool.assign[1] == 1 and pool.assign[6] == 0
+    assert 1 not in pool.cohort
+    res = pool.admit(moved)
+    assert res.newly.all() and res.slots[0] >= 2   # seated in block 1 now
+    pool.check()
+
+
+def test_cluster_pool_state_roundtrip():
+    assign = contiguous_clusters(8, 2)
+    pool = ClusterSlotPool(8, 4, assign, 2)
+    pool.admit(np.array([0, 5, 1, 7]))
+    pool.reassign(np.array([0]), np.array([1]))
+    sd = pool.state_dict()
+    fresh = ClusterSlotPool(8, 4, contiguous_clusters(8, 2), 2)
+    fresh.load_state_dict(sd)
+    np.testing.assert_array_equal(fresh.assign, pool.assign)
+    np.testing.assert_array_equal(fresh.user_slot, pool.user_slot)
+    np.testing.assert_array_equal(fresh.slot_user, pool.slot_user)
+    fresh.check()
+    wrong_k = ClusterSlotPool(8, 4, contiguous_clusters(8, 4), 4)
+    with pytest.raises(CheckpointError, match="num_clusters"):
+        wrong_k.load_state_dict(sd)
+    flat_sd = SlotPool(8, 4).state_dict()
+    with pytest.raises(CheckpointError):
+        pool.load_state_dict(flat_sd)
+
+
+def test_clustered_sampling_delegates_at_k1():
+    assign = contiguous_clusters(16, 1)
+    weights = np.arange(16, dtype=float) + 1.0
+    avail = np.ones(16, bool)
+    avail[3] = False
+    a = sample_participants_clustered(
+        np.random.default_rng(7), assign, 1, 5, 16, weights=weights,
+        available=avail)
+    b = sample_participants(np.random.default_rng(7), 16, 5,
+                            weights=weights, available=avail)
+    np.testing.assert_array_equal(a, b)   # same RNG stream, same draw
+
+
+def test_clustered_sampling_respects_block_budget():
+    assign = contiguous_clusters(16, 4)
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        sel = sample_participants_clustered(rng, assign, 4, 12, block=2)
+        assert sel.size <= 8                     # 4 clusters x block=2
+        counts = np.bincount(assign[sel], minlength=4)
+        assert (counts <= 2).all()
+        assert np.array_equal(sel, np.unique(sel))

@@ -30,10 +30,9 @@ sys.path.insert(0, _ROOT)
 
 import numpy as np  # noqa: E402
 
-from benchmarks.common import (ExperimentConfig,  # noqa: E402
-                               checkpoint_path,
-                               run_vectorized_experiment)
 from repro import checkpoint  # noqa: E402
+from repro.harness import (ExperimentConfig, checkpoint_path,  # noqa: E402
+                           run)
 
 U, C, ROUNDS, PARTICIPATION = 4096, 64, 3, 0.5
 
@@ -43,10 +42,10 @@ def main() -> int:
                           rounds=ROUNDS, capacity=(12, 24), arrivals=4,
                           batch=8, seed=5, request_backend="stacked",
                           cohort_size=C, participation=PARTICIPATION)
+    print("plan:", xc.validate("osafl").describe())
     with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as td:
-        hist = run_vectorized_experiment("osafl", xc, eval_samples=64,
-                                         save_every_k=ROUNDS,
-                                         checkpoint_dir=td)
+        hist = run("osafl", xc, eval_samples=64, save_every_k=ROUNDS,
+                   checkpoint_dir=td)
         sv = checkpoint.load_run_state(checkpoint_path(td, ROUNDS))["server"]
     budget = max(1, int(round(PARTICIPATION * C)))
     bad = []

@@ -1,0 +1,114 @@
+"""CI hierarchical-aggregation smoke: 3 online rounds at U = 4096 with a
+C = 64 slot pool split into K = 8 edge clusters, on a faked 2x4 mesh.
+
+Runs the two-tier aggregation (``core/hierarchy.py``) through the pod
+harness at scale: 4096 registered users, a 64-slot pool in 8 per-cluster
+blocks of 8 (each mesh shard owning whole blocks), participation sampling
+stratified over the live cluster map, and ``cluster_churn`` membership
+moves firing every round. Fails (exit 1) on a non-finite loss, a
+participant count over the sampling budget, a snapshot whose slot pool is
+not K per-cluster sub-pools, a missing/wrong-shape cluster-score carry
+(``clam_prev``), or a churned cluster map that stopped being a valid
+K-way partition. Prints the resolved plan line + per-round wall-clock so
+regressions are visible in the CI log (the <= 3x hier-vs-flat aggregation
+cost is gated separately by ``benchmarks/bench_online.py --smoke``).
+
+Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+       PYTHONPATH=src python tools/hier_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import checkpoint  # noqa: E402
+from repro.harness import (ExperimentConfig, checkpoint_path,  # noqa: E402
+                           resolve, run)
+
+U, C, K, ROUNDS, PARTICIPATION = 4096, 64, 8, 3, 0.5
+
+
+def main() -> int:
+    if jax.device_count() < 8:
+        print(f"hier smoke FAILED: needs 8 faked CPU devices, got "
+              f"{jax.device_count()} (XLA_FLAGS not applied before jax "
+              "import?)")
+        return 1
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    xc = ExperimentConfig(model="mlp", dataset=2, num_clients=U,
+                          rounds=ROUNDS, capacity=(12, 24), arrivals=4,
+                          batch=8, seed=5, request_backend="stacked",
+                          cohort_size=C, participation=PARTICIPATION,
+                          num_clusters=K,
+                          scenario="cluster_churn(rate=0.05)")
+    print("plan:", resolve("osafl", xc, mesh=mesh).describe())
+    with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as td:
+        hist = run("osafl", xc, eval_samples=64, mesh=mesh,
+                   save_every_k=ROUNDS, checkpoint_dir=td)
+        snap = checkpoint.load_run_state(checkpoint_path(td, ROUNDS))
+    sv = snap["server"]
+    # stratified sampling draws ceil(m * n_k / U) per cluster, so the round
+    # budget is the flat target plus at most one rounding unit per cluster
+    # (and never more than the pool): sum_k ceil(x_k) < sum_k x_k + K
+    m = max(1, int(round(PARTICIPATION * C)))
+    budget = min(C, m + K - 1)
+    bad = []
+    pool = sv["pool"]
+    if "pools" not in pool or len(pool["pools"]) != K:
+        bad.append(f"snapshot slot pool is not {K} per-cluster sub-pools "
+                   f"(keys: {sorted(pool)})")
+    if int(pool.get("num_clusters", -1)) != K:
+        bad.append(f"snapshot pool num_clusters={pool.get('num_clusters')}, "
+                   f"expected {K}")
+    assign = np.asarray(pool["assign"])
+    if assign.shape != (U,) or assign.min() < 0 or assign.max() >= K:
+        bad.append(f"churned cluster map is not a valid {K}-way partition "
+                   f"of {U} users (shape={assign.shape}, "
+                   f"range=[{assign.min()}, {assign.max()}])")
+    clam = np.asarray(sv["inner"].get("clam_prev", np.empty(0)))
+    if clam.shape != (K,) or not np.isfinite(clam).all():
+        bad.append(f"cluster-score carry clam_prev has shape {clam.shape} "
+                   f"(expected ({K},)) or non-finite entries")
+    if sv["inner"]["d_buffer"].shape[0] != C:
+        bad.append(f"slot buffer is {sv['inner']['d_buffer'].shape[0]} rows "
+                   f"wide, expected C={C}")
+    for h in hist:
+        print(f"round={h['round']} test_loss={h['test_loss']:.4f} "
+              f"participants={h['participants']} "
+              f"round_s={h['round_s']:.2f}")
+        if not np.isfinite(h["test_loss"]):
+            bad.append(f"round {h['round']}: non-finite loss")
+        if h["participants"] > budget:
+            bad.append(f"round {h['round']}: {h['participants']} "
+                       f"participants > budget {budget}")
+    if len(hist) != ROUNDS:
+        bad.append(f"history has {len(hist)} rounds, expected {ROUNDS}")
+    for msg in bad:
+        print("FAIL:", msg)
+    if bad:
+        print("hier smoke FAILED")
+        return 1
+    print(json.dumps({"U": U, "C": C, "K": K, "rounds": ROUNDS,
+                      "round_s": [h["round_s"] for h in hist],
+                      "cluster_sizes": np.bincount(assign,
+                                                   minlength=K).tolist(),
+                      "final_loss": hist[-1]["test_loss"]}, default=float))
+    print(f"hier smoke OK: U={U} population, C={C} slots in K={K} cluster "
+          f"blocks on a 2x4 mesh, churned map still partitions, "
+          f"participants <= {budget}, losses finite")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,11 +20,10 @@ _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
 
-from benchmarks.common import (checkpoint_path,  # noqa: E402
-                               resume_smoke_config,
-                               run_vectorized_experiment)
 from repro import checkpoint  # noqa: E402
 from repro.checkpoint import diff_snapshots  # noqa: E402
+from repro.harness import (checkpoint_path,  # noqa: E402
+                           resume_smoke_config, run)
 
 ROUNDS, HALF = 6, 3
 METRICS = ("round", "test_loss", "test_acc", "participants")
@@ -39,15 +38,14 @@ def main() -> int:
     # inside np.savez) from turning teardown itself into the failure.
     with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as da, \
             tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as db:
-        full = run_vectorized_experiment("osafl", _cfg(ROUNDS),
-                                         eval_samples=64,
-                                         save_every_k=ROUNDS,
-                                         checkpoint_dir=da)
-        run_vectorized_experiment("osafl", _cfg(HALF), eval_samples=64,
-                                  save_every_k=HALF, checkpoint_dir=db)
-        resumed = run_vectorized_experiment(
-            "osafl", _cfg(ROUNDS), eval_samples=64, save_every_k=HALF,
-            checkpoint_dir=db, resume_from=checkpoint_path(db, HALF))
+        print("plan:", _cfg(ROUNDS).validate("osafl").describe())
+        full = run("osafl", _cfg(ROUNDS), eval_samples=64,
+                   save_every_k=ROUNDS, checkpoint_dir=da)
+        run("osafl", _cfg(HALF), eval_samples=64, save_every_k=HALF,
+            checkpoint_dir=db)
+        resumed = run("osafl", _cfg(ROUNDS), eval_samples=64,
+                      save_every_k=HALF, checkpoint_dir=db,
+                      resume_from=checkpoint_path(db, HALF))
         bad = False
         for h_full, h_res in zip(full, resumed):
             line = " ".join(f"{k}={h_full[k]}" for k in METRICS)

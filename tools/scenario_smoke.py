@@ -34,8 +34,7 @@ sys.path.insert(0, _ROOT)
 import numpy as np  # noqa: E402
 
 from benchmarks import curves  # noqa: E402
-from benchmarks.common import (ExperimentConfig,  # noqa: E402
-                               run_vectorized_experiment)
+from repro.harness import ExperimentConfig, run  # noqa: E402
 
 U, C, ROUNDS, PARTICIPATION = 32, 8, 4, 0.75
 COMPOSED = "churn(p_away=0.5,period=2,away=1)+flash_crowd(period=2,duty=1,scale=2)"
@@ -65,8 +64,8 @@ def main(argv=None) -> int:
     runs = {"baseline": "", "null": "null", "composed": COMPOSED}
     hists = {}
     for name, spec in runs.items():
-        hists[name] = run_vectorized_experiment("osafl", _xc(spec),
-                                                eval_samples=64)
+        print(f"plan[{name}]:", _xc(spec).validate("osafl").describe())
+        hists[name] = run("osafl", _xc(spec), eval_samples=64)
         doc = curves.make_doc(
             name="scenario_smoke", preset="smoke",
             config={"U": U, "C": C, "rounds": ROUNDS,

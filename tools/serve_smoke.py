@@ -1,7 +1,8 @@
 """CI train-while-serve smoke: 3 online pod rounds on a faked 2x4 mesh with
 a live hot-reloading model server polling the checkpoint directory.
 
-The trainer (``run_pod_online_experiment``, OSAFL, mesh-sharded FIFO buffer)
+The trainer (``repro.harness.run`` on the pod engine, OSAFL, mesh-sharded
+FIFO buffer)
 runs in a background thread publishing a streaming-v2 snapshot every round
 with ``keep_last=2`` retention; the foreground ``serve_loop`` polls, maps
 only committed snapshots, scores synthetic request batches on pinned
@@ -35,8 +36,7 @@ sys.path.insert(0, _ROOT)
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from benchmarks.common import (ExperimentConfig,  # noqa: E402
-                               run_pod_online_experiment)
+from repro.harness import ExperimentConfig, resolve, run  # noqa: E402
 from repro.launch.serve import make_request_batch, serve_loop  # noqa: E402
 
 ROUNDS = 3
@@ -57,6 +57,7 @@ def main() -> int:
     xc = ExperimentConfig(model="mlp", dataset=2, num_clients=8,
                           rounds=ROUNDS, capacity=(12, 24), arrivals=4,
                           batch=8, seed=11)
+    print("plan:", resolve("osafl", xc, mesh=mesh).describe())
     failures = []
     with tempfile.TemporaryDirectory(ignore_cleanup_errors=True) as td:
         ckpt_dir = Path(td) / "ckpt"
@@ -64,8 +65,7 @@ def main() -> int:
 
         def train():
             try:
-                run_pod_online_experiment(
-                    "osafl", xc, eval_samples=32, mesh=mesh,
+                run("osafl", xc, eval_samples=32, mesh=mesh,
                     save_every_k=1, checkpoint_dir=ckpt_dir, keep_last=2)
             except BaseException as e:          # surfaced after join
                 train_err.append(e)
